@@ -1,0 +1,34 @@
+"""Communication-volume table: the paper's selective-upload advantage.
+
+Per-round client->server bytes for each aggregation strategy at several
+ranks on llama2-7b-shaped adapters (q,v targets).  FedSA/SFed upload only A —
+half of FedIT's volume; this is also visible as all-reduce bytes in the
+dry-run's train_4k collective schedule.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import LoRAConfig
+from repro.core.aggregation import strategy_flags, upload_bytes
+from repro.core.lora import init_lora
+from repro.models.api import build_model
+
+
+def main(emit=print):
+    cfg = get_config("llama2-7b")
+    model = build_model(cfg)
+    emit("bench,strategy,rank,upload_MB_per_client_round")
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    for rank in (8, 64, 512):
+        lora1 = init_lora(zeros, jax.random.key(1), LoRAConfig(rank=rank))
+        lora_n = jax.tree.map(lambda x: x[None], lora1)
+        for strat in ("fedit", "ffa", "fedsa", "rolora"):
+            (_, _), (agg_a, agg_b) = strategy_flags(strat, 0)
+            mb = upload_bytes(lora_n, bool(agg_a), bool(agg_b)) / 1e6
+            emit(f"comm,{strat},{rank},{mb:.2f}")
+
+
+if __name__ == "__main__":
+    main()

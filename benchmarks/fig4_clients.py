@@ -1,0 +1,31 @@
+"""Paper Fig. 4 / §5.2: stability across client counts at fixed high rank.
+
+Claim: at r=512, alpha/r baselines degrade as N grows (ppl 7 -> 15 in the
+paper); SFed-LoRA is invariant to N (sqrt(N) compensates aggregation).
+Reduced scale: rank 256, N in {2, 4, 8}.
+"""
+import numpy as np
+
+from benchmarks.common import pretrained_base, run_method
+
+CLIENTS = (2, 4, 8)
+MAIN = ("RoLoRA", "FedSA-LoRA", "FedSA-rsLoRA", "SFed-LoRA")
+RANK = 256
+
+
+def main(rounds: int = 25, emit=print):
+    model, base = pretrained_base()
+    emit("bench,method,clients,final_loss,final_ppl")
+    results = {}
+    for method in MAIN:
+        for n in CLIENTS:
+            tr = run_method(method, rank=RANK, clients=n, rounds=rounds,
+                            model=model, base=base)
+            final = np.mean([h["loss"] for h in tr.history[-5:]])
+            results[(method, n)] = final
+            emit(f"fig4,{method},{n},{final:.4f},{np.exp(final):.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

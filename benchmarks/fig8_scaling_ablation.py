@@ -1,0 +1,38 @@
+"""Paper Fig. 8 / App. B.3: alternative scaling factors at extreme rank.
+
+Candidates: gamma_za = 1/sqrt(N r)  (smaller than optimal -> slow),
+gamma_zb = N^2/sqrt(r)              (larger -> explodes early),
+vs FedSA-LoRA (alpha/r), FedSA-rsLoRA (alpha/sqrt r), SFed-LoRA (alpha sqrt(N/r)).
+
+Claim: sfedlora converges fastest/lowest; zb is unstable early; za and rslora
+converge slowly; alpha/r stagnates.  Reduced scale: rank 512, N=6.
+"""
+import numpy as np
+
+from benchmarks.common import pretrained_base, run_method
+
+METHODS_ABL = ("FedSA-LoRA", "FedSA-rsLoRA", "SFed-LoRA", "gamma_za",
+               "gamma_zb")
+RANK = 512
+
+
+def main(rounds: int = 25, emit=print):
+    model, base = pretrained_base()
+    emit("bench,method,rank,round,loss")
+    results = {}
+    for method in METHODS_ABL:
+        tr = run_method(method, rank=RANK, clients=6, rounds=rounds,
+                        model=model, base=base)
+        losses = [h["loss"] for h in tr.history]
+        for h in tr.history[:: max(1, rounds // 8)]:
+            emit(f"fig8,{method},{RANK},{h['round']},{h['loss']:.4f}")
+        results[method] = {"final": float(np.mean(losses[-5:])),
+                           "peak": float(np.max(losses)),
+                           "first": float(losses[0])}
+        emit(f"fig8_final,{method},{RANK},final={results[method]['final']:.4f},"
+             f"peak={results[method]['peak']:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 9 / App. B.4: mean/variance of post-adapter activations across
+ranks, plus the Definition 4.1 moment sweep (App. A eq. 23): the analytic
+one-step aggregated adapter moment gamma^2 r/N per scaling.
+
+Claim: sfedlora's adapter output moment is ~constant in (N, r); lora's decays
+as 1/(r N); rslora's as 1/N.
+"""
+import jax
+import numpy as np
+
+from benchmarks.common import pretrained_base, run_method
+from repro.core.scaling import predicted_moment_scale, scaling_factor
+from repro.core.stability import aggregated_moment_sweep
+
+
+def main(rounds: int = 10, emit=print):
+    # --- analytic Definition-4.1 sweep
+    emit("bench,scaling,clients,rank,measured_moment,predicted_scale")
+    sweep = aggregated_moment_sweep(jax.random.key(0), ranks=(4, 32, 128, 512),
+                                    clients=(1, 4, 16))
+    for name, res in sweep.items():
+        for (n, r), v in res.items():
+            pred = predicted_moment_scale(
+                scaling_factor(name, 8.0, r, n), r, n)
+            emit(f"fig9_moment,{name},{n},{r},{v:.4e},{pred:.4e}")
+
+    # --- empirical activation stats during training
+    model, base = pretrained_base()
+    emit("bench,method,rank,act_mean,act_var")
+    out = {}
+    for method in ("FedSA-LoRA", "FedSA-rsLoRA", "SFed-LoRA"):
+        for rank in (32, 512):
+            tr = run_method(method, rank=rank, rounds=rounds, model=model,
+                            base=base)
+            from repro.core.stability import activation_moments
+            import jax as _jax
+            lora0 = _jax.tree.map(lambda x: x[0], tr.lora)
+            toks = _jax.numpy.asarray(tr.dataset.eval_batch(8))
+            st = activation_moments(model, tr.base, {"tokens": toks}, lora0,
+                                    tr.gamma)
+            out[(method, rank)] = st
+            emit(f"fig9,{method},{rank},{st['mean']:.4e},{st['var']:.4e}")
+    return sweep, out
+
+
+if __name__ == "__main__":
+    main()

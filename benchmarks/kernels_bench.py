@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: us_per_call for the Pallas kernels vs their jnp
+references.  NOTE: on this CPU container the kernels run in interpret mode
+(Python emulation), so absolute Pallas numbers are NOT hardware-representative
+— the jnp reference timing and the derived FLOP counts are the meaningful
+columns; on a real TPU the same harness times the Mosaic kernels.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_mha, fused_lora_matmul, rglru_scan_op
+
+
+def timeit(fn, *args, iters: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(emit=print):
+    emit("bench,name,us_per_call,derived")
+    key = jax.random.key(0)
+
+    # lora_matmul: (m,k,n,r) = (1024, 1024, 1024, 64)
+    m, k, n, r = 1024, 1024, 1024, 64
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32)
+    a = jax.random.normal(ks[2], (r, k), jnp.float32) * 0.02
+    b = jax.random.normal(ks[3], (n, r), jnp.float32) * 0.02
+    flops = 2 * m * k * n + 2 * m * k * r + 2 * m * r * n
+    ref_fn = jax.jit(lambda *t: ref.lora_matmul_ref(*t, 2.0))
+    us = timeit(ref_fn, x, w, a, b)
+    emit(f"kernels,lora_matmul_ref_jnp,{us:.1f},gflops={flops/us/1e3:.2f}")
+    us = timeit(lambda *t: fused_lora_matmul(*t, 2.0), x, w, a, b)
+    emit(f"kernels,lora_matmul_pallas_interp,{us:.1f},flops={flops}")
+
+    # flash attention: b=1, s=1024, h=4, d=64
+    bq, s, h, d = 1, 1024, 4, 64
+    q = jax.random.normal(ks[0], (bq, s, h, d), jnp.float32)
+    kk = jax.random.normal(ks[1], (bq, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (bq, s, h, d), jnp.float32)
+    flops = 4 * bq * h * s * s * d
+    ref_fn = jax.jit(lambda *t: ref.flash_attention_ref(*t, causal=True))
+    us = timeit(ref_fn, q, kk, v)
+    emit(f"kernels,flash_attention_ref_jnp,{us:.1f},gflops={flops/us/1e3:.2f}")
+    us = timeit(lambda *t: flash_mha(*t, causal=True), q, kk, v)
+    emit(f"kernels,flash_attention_pallas_interp,{us:.1f},flops={flops}")
+
+    # rglru scan: (bt, s, d) = (4, 2048, 256)
+    bt, s, d = 4, 2048, 256
+    a_ = jax.random.uniform(ks[0], (bt, s, d), jnp.float32, 0.8, 0.999)
+    b_ = jax.random.normal(ks[1], (bt, s, d), jnp.float32)
+    from repro.models.rglru import rglru_scan as assoc_scan
+    ref_fn = jax.jit(assoc_scan)
+    us = timeit(ref_fn, a_, b_)
+    bytes_moved = 3 * bt * s * d * 4
+    emit(f"kernels,rglru_assoc_scan_jnp,{us:.1f},gb_s={bytes_moved/us/1e3:.2f}")
+    us = timeit(rglru_scan_op, a_, b_)
+    emit(f"kernels,rglru_scan_pallas_interp,{us:.1f},bytes={bytes_moved}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs(per-device) / peak_FLOP/s
+  memory term     = HLO_bytes(per-device) / HBM_bw
+  collective term = collective_bytes(per-device) / ICI_bw
+plus MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode),
+the useful-compute ratio, the dominant bottleneck, and a what-would-move-it
+note.  Hardware: TPU v5e — 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The XLA cost/memory analyses of an SPMD module are for the per-device
+partitioned program, so no extra division by chip count is needed; chips
+enter through the sharded shapes themselves.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, config_for_shape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS",
+                          "dryrun")
+
+
+def count_params(cfg):
+    """Exact param count (+ active count for MoE) via eval_shape."""
+    import jax
+    from repro.models.api import build_model
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    total = active = 0
+    def walk(node, in_moe):
+        nonlocal total, active
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, in_moe or k == "moe")
+            return
+        n = 1
+        for d in node.shape:
+            n *= d
+        total += n
+        if in_moe and len(node.shape) >= 3 and cfg.moe:
+            active += int(n * cfg.moe.top_k / max(cfg.moe.num_experts, 1))
+        else:
+            active += n
+    walk(shapes, False)
+    return total, active
+
+
+def model_flops(arch, shape_name, cfg=None):
+    """Architectural useful FLOPs for the whole step (global)."""
+    cfg = cfg or config_for_shape(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    total, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * active * tokens
+    return 2 * active * shape.global_batch          # decode: 1 token/seq
+
+
+def analyze(rec, devices=None):
+    if rec.get("skipped") or rec.get("error"):
+        return None
+    devices = devices or rec["devices"]
+    src = rec.get("corrected", rec)   # unit-calibrated loop-exact stats
+    ct = (src["flops"] or 0) / PEAK_FLOPS_BF16
+    mt = (src["bytes_accessed"] or 0) / HBM_BW
+    cb = sum(src["collective_bytes"].values())
+    lt = cb / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": lt}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = (src["flops"] or 0) * devices
+    ratio = mf / hlo_global if hlo_global else 0.0
+    return {**rec, "compute_s": ct, "memory_s": mt, "collective_s": lt,
+            "dominant": dom, "model_flops": mf,
+            "useful_ratio": ratio, "collective_total_bytes": cb}
+
+
+_SUGGEST = {
+    "compute": "reduce recompute (remat policy) / raise useful-ratio toward 1",
+    "memory": "fuse adapter GEMMs (Pallas lora_matmul), shard activations "
+              "(sequence parallel), bf16 logits CE",
+    "collective": "reshard to cut all-gathers (kv-head replication, "
+                  "seq-parallel norm), overlap A-aggregation with compute",
+}
+
+
+def table(records, emit=print):
+    emit("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+         "model_flops,useful_ratio,note")
+    rows = []
+    for rec in records:
+        if rec.get("skipped"):
+            emit(f"{rec['arch']},{rec['shape']},{rec['mesh']},-,-,-,"
+                 f"SKIP,-,-,{rec['skipped'][:40]}")
+            continue
+        if rec.get("error"):
+            emit(f"{rec['arch']},{rec['shape']},{rec['mesh']},-,-,-,ERROR,-,-,"
+                 f"{rec['error'][:60]}")
+            continue
+        a = analyze(rec)
+        rows.append(a)
+        emit(f"{a['arch']},{a['shape']},{a['mesh']},{a['compute_s']:.4f},"
+             f"{a['memory_s']:.4f},{a['collective_s']:.4f},{a['dominant']},"
+             f"{a['model_flops']:.3e},{a['useful_ratio']:.3f},"
+             f"{_SUGGEST[a['dominant']][:50]}")
+    return rows
+
+
+def load_records(dirname=DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(emit=print):
+    recs = load_records()
+    if not recs:
+        emit("roofline,no_dryrun_records_found,run launch/dryrun.py first")
+        return []
+    return table(recs, emit)
+
+
+if __name__ == "__main__":
+    main()

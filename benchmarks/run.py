@@ -1,0 +1,67 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+``python -m benchmarks.run``           runs everything (CSV to stdout)
+``python -m benchmarks.run fig2 fig8`` runs a subset
+``FAST=1``                             shortens training benches
+"""
+import os
+import sys
+import time
+
+SUITES = ("comm", "kernels", "roofline", "fig9", "fig3", "fig2", "fig4",
+          "fig8", "tab12")
+
+
+def main() -> None:
+    want = [a for a in sys.argv[1:] if not a.startswith("-")] or list(SUITES)
+    fast = os.environ.get("FAST", "0") not in ("0", "")
+    rounds = 10 if fast else None
+
+    def run(name, fn, **kw):
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(**kw)
+        except Exception as e:  # keep the suite alive
+            import traceback
+            print(f"{name},ERROR,{e}")
+            traceback.print_exc()
+        print(f"# === {name} done in {time.time()-t0:.1f}s ===", flush=True)
+
+    if "comm" in want:
+        from benchmarks import comm_table
+        run("comm_table", comm_table.main)
+    if "kernels" in want:
+        from benchmarks import kernels_bench
+        run("kernels_bench", kernels_bench.main)
+    if "roofline" in want:
+        from benchmarks import roofline
+        run("roofline", roofline.main)
+    if "fig9" in want:
+        from benchmarks import fig9_activations
+        run("fig9_activations", fig9_activations.main,
+            **({"rounds": rounds} if rounds else {}))
+    if "fig3" in want:
+        from benchmarks import fig3_gradnorms
+        run("fig3_gradnorms", fig3_gradnorms.main,
+            **({"rounds": rounds} if rounds else {}))
+    if "fig2" in want:
+        from benchmarks import fig2_convergence
+        run("fig2_convergence", fig2_convergence.main,
+            **({"rounds": rounds} if rounds else {}))
+    if "fig4" in want:
+        from benchmarks import fig4_clients
+        run("fig4_clients", fig4_clients.main,
+            **({"rounds": rounds} if rounds else {}))
+    if "fig8" in want:
+        from benchmarks import fig8_scaling_ablation
+        run("fig8_scaling_ablation", fig8_scaling_ablation.main,
+            **({"rounds": rounds} if rounds else {}))
+    if "tab12" in want:
+        from benchmarks import tab12_accuracy
+        run("tab12_accuracy", tab12_accuracy.main,
+            **({"rounds": rounds} if rounds else {}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: pretrain a ~small base LM, then federated LoRA
+fine-tuning on heterogeneous (Dirichlet non-IID) clients for a few hundred
+rounds, with evaluation and checkpointing.  This is the training-kind
+end-to-end example (system-prompt deliverable b).
+
+  PYTHONPATH=src python examples/federated_finetune.py [--rounds 200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import pretrained_base
+from repro.checkpoint.io import save_federated_state
+from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
+from repro.core.federated import FederatedTrainer
+from repro.data.synthetic import FederatedDataset
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=200)
+ap.add_argument("--rank", type=int, default=64)
+ap.add_argument("--clients", type=int, default=4)
+args = ap.parse_args()
+
+print("=== stage 1: pretrain base (cached) ===")
+model, base = pretrained_base()
+
+print("=== stage 2: federated LoRA fine-tune (non-IID Dir(0.5)) ===")
+ds = FederatedDataset(model.cfg.vocab_size, args.clients, seq_len=64,
+                      batch_per_client=4, partition="dirichlet",
+                      dirichlet_alpha=0.5)
+tr = FederatedTrainer(
+    model, ds,
+    lora_cfg=LoRAConfig(rank=args.rank, alpha=8.0, scaling="sfedlora"),
+    fed_cfg=FederatedConfig(num_clients=args.clients, local_steps=5,
+                            aggregation="fedsa", partition="dirichlet"),
+    opt_cfg=OptimizerConfig(name="sgd", lr=1.0))  # tiny-model-scale lr
+print(f"gamma_z = 8*sqrt({args.clients}/{args.rank}) = {tr.gamma:.4f}")
+tr.run(args.rounds, log_every=max(1, args.rounds // 20))
+
+print("=== stage 3: evaluate + checkpoint ===")
+for c in range(args.clients):
+    print(f"client {c} held-out ppl: {tr.eval_perplexity(client=c):.3f}")
+save_federated_state("/tmp/sfedlora_ckpt.npz", tr.base, tr.lora,
+                     tr.opt_state, tr.round_idx)
+print("checkpoint -> /tmp/sfedlora_ckpt.npz")
+start = np.exp(tr.history[0]["loss"])
+end = np.exp(np.mean([h["loss"] for h in tr.history[-10:]]))
+print(f"train ppl {start:.2f} -> {end:.2f} over {args.rounds} rounds")
+assert end < start, "training should reduce perplexity"

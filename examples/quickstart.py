@@ -1,0 +1,45 @@
+"""Quickstart: federated LoRA fine-tuning with the SFed-LoRA scaling factor.
+
+Runs a reduced gemma-2b across 4 simulated clients for 15 rounds, comparing
+the paper's gamma_z = alpha*sqrt(N/r) against standard LoRA scaling at high
+rank, then merges adapters for zero-latency serving.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
+from repro.core.federated import FederatedTrainer
+from repro.core.lora import merge_lora
+from repro.data.synthetic import FederatedDataset
+from repro.models.api import build_model
+
+RANK = 128           # high rank — where standard alpha/r collapses
+CLIENTS = 4
+
+cfg = get_config("gemma-2b").reduced()
+model = build_model(cfg)
+print(f"model: {cfg.name} (reduced) — {cfg.num_layers}L d={cfg.d_model}")
+
+for scaling in ("lora", "sfedlora"):
+    ds = FederatedDataset(cfg.vocab_size, CLIENTS, seq_len=64,
+                          batch_per_client=4)
+    tr = FederatedTrainer(
+        model, ds,
+        lora_cfg=LoRAConfig(rank=RANK, alpha=8.0, scaling=scaling),
+        fed_cfg=FederatedConfig(num_clients=CLIENTS, local_steps=2,
+                                aggregation="fedsa"),
+        opt_cfg=OptimizerConfig(name="sgd", lr=5e-3))
+    print(f"\n--- scaling={scaling}  gamma={tr.gamma:.4f} ---")
+    tr.run(15, log_every=5)
+    g = np.mean([h["grad_norm"] for h in tr.history])
+    print(f"mean grad norm: {g:.2e}   "
+          f"(alpha/r freezes high-rank adapters; sqrt(N/r) keeps them live)")
+
+# zero-latency deployment: adapters merge into the base weights
+lora0 = jax.tree.map(lambda x: x[0], tr.lora)
+merged = merge_lora(tr.base, lora0, tr.gamma)
+print("\nmerged client-0 adapters into base weights — serving needs no "
+      "adapter math (paper §4, 'no additional inference latency').")

@@ -1,0 +1,60 @@
+"""Serving example: load a federated checkpoint, merge a client's adapters,
+and run batched greedy decoding with a KV cache (prefill + decode loop).
+
+  PYTHONPATH=src python examples/serve_lora.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import load_federated_state
+from repro.configs import get_config
+from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
+from repro.core.lora import merge_lora, num_lora_params
+from repro.launch.serve import generate
+from repro.models.api import build_model
+
+CKPT = "/tmp/sfedlora_ckpt.npz"
+
+if not os.path.exists(CKPT):
+    # build a fresh tiny state if examples/federated_finetune.py wasn't run
+    print("(no checkpoint found — training 5 quick rounds first)")
+    from repro.core.federated import FederatedTrainer
+    from repro.data.synthetic import FederatedDataset
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    ds = FederatedDataset(cfg.vocab_size, 2, seq_len=32, batch_per_client=2)
+    tr = FederatedTrainer(model, ds, lora_cfg=LoRAConfig(rank=8),
+                          fed_cfg=FederatedConfig(num_clients=2,
+                                                  local_steps=1),
+                          opt_cfg=OptimizerConfig())
+    tr.run(5)
+    base, lora, gamma = tr.base, tr.lora, tr.gamma
+else:
+    from benchmarks.common import bench_config
+    cfg = bench_config()
+    model = build_model(cfg)
+    base, lora, _, _ = load_federated_state(CKPT)
+    gamma = 8.0 * (4 / 64) ** 0.5
+
+client = 0
+lora_c = jax.tree.map(lambda x: x[client], lora)
+print(f"client {client} adapter params: {num_lora_params(lora_c):,}")
+merged = merge_lora(base, lora_c, gamma)
+
+prompt = jnp.asarray([[5, 17, 42, 7]] * 3, jnp.int32)   # batch of 3 requests
+seq = generate(model, merged, prompt, steps=12, max_len=16)
+print("generated token ids (merged adapters, zero serving overhead):")
+print(seq)
+
+# personalization check: client 1's B differs -> different merged model
+lora_c1 = jax.tree.map(lambda x: x[min(1, x.shape[0] - 1)], lora)
+merged1 = merge_lora(base, lora_c1, gamma)
+seq1 = generate(model, merged1, prompt, steps=12, max_len=16)
+same = bool(jnp.all(seq == seq1))
+print(f"client-1 generations identical to client-0: {same} "
+      f"(B is client-personalized under FedSA split aggregation)")

@@ -1,0 +1,2 @@
+"""repro: SFed-LoRA — stabilized federated LoRA fine-tuning in JAX."""
+__version__ = "1.0.0"

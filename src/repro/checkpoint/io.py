@@ -1,0 +1,58 @@
+"""Flat-npz pytree checkpointing (orbax is not available offline)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = np.asarray(tree)
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path: str):
+    data = np.load(path)
+    tree = {}
+    for key in data.files:
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(data[key])
+    return _unlistify(tree)
+
+
+def _unlistify(node):
+    if isinstance(node, dict):
+        if node and all(k.startswith("#") for k in node):
+            return [_unlistify(node[f"#{i}"]) for i in range(len(node))]
+        return {k: _unlistify(v) for k, v in node.items()}
+    return node
+
+
+def save_federated_state(path: str, base, lora, opt_state, round_idx: int):
+    save_pytree(path, {"base": base, "lora": lora, "opt": opt_state,
+                       "round": np.asarray(round_idx)})
+
+
+def load_federated_state(path: str):
+    t = load_pytree(path)
+    return t["base"], t["lora"], t.get("opt", {}), int(t["round"])

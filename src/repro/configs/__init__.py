@@ -1,0 +1,75 @@
+"""Architecture registry: ``get_config("<id>")`` / ``--arch <id>``.
+
+The 10 assigned architectures plus the paper's own models.  ``long_500k``
+support per arch is recorded in LONG_CONTEXT_OK (sub-quadratic requirement —
+see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (INPUT_SHAPES, FederatedConfig, InputShape,
+                                LoRAConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig)
+
+ARCHS = {
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "paligemma-3b": "paligemma_3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "gemma-2b": "gemma_2b",
+    "whisper-medium": "whisper_medium",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "stablelm-1.6b": "stablelm_1_6b",
+    # the paper's own models
+    "llama2-7b": "llama2_7b",
+    "roberta-large": "roberta_large",
+}
+
+ASSIGNED = tuple(ARCHS)[:10]
+
+# long_500k policy (DESIGN.md §5): native sub-quadratic or family-faithful
+# sliding-window variant; None = skipped (pure full attention / enc-dec).
+LONG_CONTEXT_OK = {
+    "mistral-nemo-12b": "sliding_window",
+    "gemma-2b": "sliding_window",
+    "recurrentgemma-9b": "native",
+    "xlstm-1.3b": "native",
+    "paligemma-3b": None,
+    "whisper-medium": None,
+    "qwen3-8b": None,
+    "qwen2-moe-a2.7b": None,
+    "granite-moe-1b-a400m": None,
+    "stablelm-1.6b": None,
+    "llama2-7b": None,
+    "roberta-large": None,
+}
+
+# encoder-only archs have no decode step at all
+NO_DECODE = ("roberta-large",)
+
+
+def get_config(arch: str, **kwargs) -> ModelConfig:
+    if arch not in ARCHS:
+        raise ValueError(f"unknown arch '{arch}'; options: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.config(**kwargs)
+
+
+def config_for_shape(arch: str, shape_name: str) -> ModelConfig:
+    """Config variant appropriate for an input shape (e.g. long_500k selects
+    the sliding-window variant for dense archs that support it)."""
+    if shape_name == "long_500k" and LONG_CONTEXT_OK.get(arch) == "sliding_window":
+        return get_config(arch, sliding_window=True)
+    return get_config(arch)
+
+
+def supports_shape(arch: str, shape_name: str) -> bool:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode" and arch in NO_DECODE:
+        return False
+    if shape_name == "long_500k":
+        return LONG_CONTEXT_OK.get(arch) is not None
+    return True

@@ -1,0 +1,97 @@
+"""Federated aggregation strategies over client-stacked LoRA trees.
+
+A client-stacked LoRA tree has a leading client dim N on every leaf:
+``a: (N, ..., r, d_in)``, ``b: (N, ..., d_out, r)``.
+
+  fedit   aggregate A and B (FedIT, Zhang et al. 2024)
+  ffa     A frozen at init (never trained), aggregate B (FFA-LoRA, Sun 2024)
+  fedsa   aggregate A only, B stays local (FedSA-LoRA, Guo 2025 — the
+          substrate for SFed-LoRA)
+  rolora  alternating rounds: train+aggregate A with B frozen, then B with A
+          frozen (RoLoRA, Chen 2025)
+
+Strategies are expressed as two traced-bool pairs so one jitted round step
+serves every method:
+  train flags  (train_a, train_b): gradient mask during local steps
+  agg flags    (agg_a, agg_b):     server-side mean over the client dim
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("fedit", "ffa", "fedsa", "rolora")
+
+
+def strategy_flags(name: str, round_idx):
+    """Returns ((train_a, train_b), (agg_a, agg_b)); entries may be traced."""
+    if name == "fedit":
+        return (True, True), (True, True)
+    if name == "ffa":
+        return (False, True), (False, True)
+    if name == "fedsa":
+        return (True, True), (True, False)
+    if name == "rolora":
+        a_round = (round_idx % 2 == 0)
+        return (a_round, ~a_round if hasattr(a_round, "dtype")
+                else not a_round), (a_round, ~a_round if
+                                    hasattr(a_round, "dtype") else not a_round)
+    raise ValueError(f"unknown strategy '{name}'")
+
+
+def _map_ab(tree, fn_a, fn_b):
+    """Apply fn_a to 'a' leaves and fn_b to 'b' leaves of a LoRA tree."""
+    def walk(node):
+        if isinstance(node, dict):
+            if set(node) <= {"a", "b"} and node:
+                out = {}
+                if "a" in node:
+                    out["a"] = fn_a(node["a"])
+                if "b" in node:
+                    out["b"] = fn_b(node["b"])
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(tree)
+
+
+def mask_grads(grads, train_a, train_b):
+    """Zero out gradients of frozen matrices (flags may be traced bools)."""
+    fa = lambda g: g * jnp.asarray(train_a, g.dtype)
+    fb = lambda g: g * jnp.asarray(train_b, g.dtype)
+    return _map_ab(grads, fa, fb)
+
+
+def aggregate_clients(lora_stacked, agg_a, agg_b, *, axis: int = 0,
+                      weights=None):
+    """Server step: replace selected leaves by their (optionally weighted)
+    client mean, broadcast back to every client (flags may be traced).
+
+    ``weights`` (N,) supports partial participation: non-participants get
+    weight 0 in the mean but still receive the broadcast aggregate."""
+    def agg(flag):
+        def f(x):
+            if weights is None:
+                mean = x.mean(axis=axis, keepdims=True)
+            else:
+                w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+                mean = (x * w).sum(axis=axis, keepdims=True) / jnp.maximum(
+                    w.sum(), 1e-9)
+            mean = jnp.broadcast_to(mean, x.shape)
+            return jnp.where(jnp.asarray(flag, bool), mean, x)
+        return f
+    return _map_ab(lora_stacked, agg(agg_a), agg(agg_b))
+
+
+def upload_bytes(lora_stacked, agg_a, agg_b) -> int:
+    """Per-round client->server communication volume (for the comm table)."""
+    total = 0
+    def count(flag):
+        def f(x):
+            nonlocal total
+            if flag:
+                total += x[0].size * x.dtype.itemsize
+            return x
+        return f
+    _map_ab(lora_stacked, count(bool(agg_a)), count(bool(agg_b)))
+    return total

@@ -1,0 +1,150 @@
+"""Federated LoRA fine-tuning: the jitted round step and a host-level trainer.
+
+One federated round (paper §3):
+  1. every client runs ``local_steps`` SGD/AdamW steps on its LoRA params
+     (vmap over the client dim — on a mesh the client dim shards over
+     ``data``/``pod`` axes, so local training is collective-free),
+  2. the server aggregates per the strategy (FedSA/SFed: mean of A only —
+     one small all-reduce over the client axes),
+  3. the aggregate is broadcast back (same collective).
+
+The scaling factor gamma = scaling_factor(scheme, alpha, r, N) multiplies the
+adapter product in every forward pass — SFed-LoRA's contribution is that this
+is sqrt(N/r), tied to the *distribution config*, not just the adapter shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (aggregate_clients, mask_grads,
+                                    strategy_flags)
+from repro.core.lora import init_lora
+from repro.core.scaling import scaling_factor
+from repro.optim.optimizers import apply_updates, global_norm, make_optimizer
+
+
+def make_fed_round_step(model, *, strategy: str, opt_cfg, gamma: float,
+                        donate: bool = True, jit: bool = True):
+    """Returns round_step(base, lora_N, opt_N, batches, round_idx).
+
+    ``lora_N``/``opt_N`` have a leading client dim; ``batches`` leaves are
+    (N, local_steps, batch, ...).  Returns (lora_N, opt_N, metrics).
+    With ``jit=False`` returns the raw function (the dry-run wraps it in its
+    own pjit with explicit shardings).
+    """
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def client_local(base, lora, opt_state, batches, round_idx):
+        (train_a, train_b), _ = strategy_flags(strategy, round_idx)
+
+        def step(carry, batch):
+            lo, st = carry
+            def loss_fn(l):
+                return model.loss(base, batch, lora=l, gamma=gamma)
+            (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(lo)
+            gnorm = global_norm(grads)
+            grads = mask_grads(grads, train_a, train_b)
+            if opt_cfg.grad_clip:
+                from repro.optim.optimizers import clip_by_global_norm
+                grads = clip_by_global_norm(grads, opt_cfg.grad_clip)
+            updates, st = opt_update(grads, st, lo)
+            lo = apply_updates(lo, updates)
+            return (lo, st), {"loss": loss, "grad_norm": gnorm}
+
+        (lora, opt_state), ms = jax.lax.scan(step, (lora, opt_state), batches)
+        return lora, opt_state, ms
+
+    def round_step(base, lora_N, opt_N, batches, round_idx, weights=None):
+        """``weights`` (N,) in {0,1}: partial participation — non-sampled
+        clients keep their previous local state and only receive the
+        aggregate."""
+        new_lora, new_opt, ms = jax.vmap(
+            client_local, in_axes=(None, 0, 0, 0, None))(
+                base, lora_N, opt_N, batches, round_idx)
+        if weights is not None:
+            sel = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(
+                    weights.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
+                new, old)
+            new_lora = sel(new_lora, lora_N)
+            new_opt = sel(new_opt, opt_N)
+        _, (agg_a, agg_b) = strategy_flags(strategy, round_idx)
+        new_lora = aggregate_clients(new_lora, agg_a, agg_b, weights=weights)
+        metrics = {"loss": ms["loss"].mean(), "grad_norm": ms["grad_norm"].mean()}
+        return new_lora, new_opt, metrics
+
+    if not jit:
+        return round_step
+    return jax.jit(round_step, donate_argnums=(1, 2) if donate else ())
+
+
+class FederatedTrainer:
+    """Host-level orchestration: state, rounds, evaluation."""
+
+    def __init__(self, model, dataset, *, lora_cfg, fed_cfg, opt_cfg,
+                 seed: int = 0, base_params=None):
+        self.model = model
+        self.dataset = dataset
+        self.fed_cfg = fed_cfg
+        self.lora_cfg = lora_cfg
+        n = fed_cfg.num_clients
+        self.gamma = scaling_factor(lora_cfg.scaling, lora_cfg.alpha,
+                                    lora_cfg.rank, n)
+        key = jax.random.key(seed)
+        kb, kl = jax.random.split(key)
+        self.base = base_params if base_params is not None else model.init(kb)
+        lora1 = init_lora(self.base, kl, lora_cfg,
+                          targets=lora_cfg.targets)
+        # FedSA init: all clients start from the SAME A (and B=0)
+        self.lora = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), lora1)
+        opt_init, _ = make_optimizer(opt_cfg)
+        opt1 = opt_init(lora1)
+        self.opt_state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), opt1)
+        self.round_step = make_fed_round_step(
+            model, strategy=fed_cfg.aggregation, opt_cfg=opt_cfg,
+            gamma=self.gamma, donate=False)
+        self.round_idx = 0
+        self.history = []
+        import numpy as _np
+        self._rng = _np.random.default_rng(seed + 31337)
+
+    def run_round(self):
+        nb = self.dataset.round_batch(self.fed_cfg.local_steps)
+        batches = {"tokens": jnp.asarray(nb)}
+        n = self.fed_cfg.num_clients
+        weights = None
+        if self.fed_cfg.participation < 1.0:
+            k = max(1, int(round(self.fed_cfg.participation * n)))
+            idx = self._rng.choice(n, size=k, replace=False)
+            weights = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+        self.lora, self.opt_state, m = self.round_step(
+            self.base, self.lora, self.opt_state, batches,
+            jnp.asarray(self.round_idx), weights)
+        self.round_idx += 1
+        m = {k: float(v) for k, v in m.items()}
+        m["round"] = self.round_idx
+        self.history.append(m)
+        return m
+
+    def run(self, rounds=None, log_every: int = 0):
+        rounds = rounds or self.fed_cfg.rounds
+        for _ in range(rounds):
+            m = self.run_round()
+            if log_every and self.round_idx % log_every == 0:
+                print(f"round {self.round_idx:4d}  loss {m['loss']:.4f}  "
+                      f"|g| {m['grad_norm']:.3e}  ppl {np.exp(m['loss']):.2f}")
+        return self.history
+
+    def eval_perplexity(self, batch: int = 16, client: int = 0) -> float:
+        """Held-out perplexity using client ``client``'s personalized model."""
+        toks = jnp.asarray(self.dataset.eval_batch(batch))
+        lora_i = jax.tree.map(lambda x: x[client], self.lora)
+        loss, _ = jax.jit(self.model.loss, static_argnames=())(
+            self.base, {"tokens": toks}, lora=lora_i, gamma=self.gamma)
+        return float(jnp.exp(loss))

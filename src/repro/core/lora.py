@@ -1,0 +1,116 @@
+"""LoRA parameter trees mirroring a model's stacked block parameters.
+
+The LoRA tree has the same {"stack": {"repeat": {"p0": ...}, "tail": ...}}
+shape as the base params, but each targeted projection leaf ``w (d_in, d_out)``
+becomes ``{"a": (r, d_in), "b": (d_out, r)}`` (stacked over the scan dim for
+repeated blocks, and over the client dim in federated training).
+
+Initialization follows the paper / standard LoRA: A ~ N(0, sigma^2), B = 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# which leaves inside each block subtree are adaptable, per target name
+_TARGET_SUBTREES = ("attn", "cross", "mlstm", "rglru")
+_TARGET_LEAVES = {
+    "q": ("attn/q", "cross/q", "mlstm/q"),
+    "k": ("attn/k", "cross/k", "mlstm/k"),
+    "v": ("attn/v", "cross/v", "mlstm/v"),
+    "o": ("attn/o", "cross/o", "mlstm/o"),
+    "wx": ("rglru/wx",),
+    "wy": ("rglru/wy",),
+}
+
+
+def _targeted_paths(targets):
+    out = set()
+    for t in targets:
+        out.update(_TARGET_LEAVES.get(t, ()))
+    return out
+
+
+def init_lora(params, key, lora_cfg, *, targets=None):
+    """Build a LoRA tree for every targeted projection found in ``params``.
+
+    Works on the full model params (walks into "stack"/"encoder") and keeps
+    leading stack dims, so scanned blocks get stacked adapters.
+    """
+    targets = _targeted_paths(targets or lora_cfg.targets)
+    r = lora_cfg.rank
+    std = lora_cfg.init_std
+    counter = [0]
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                sub = walk(v, path + (k,))
+                if sub is not None:
+                    out[k] = sub
+            return out or None
+        # leaf array: check if its (parent, name) is targeted
+        tail = "/".join(path[-2:])
+        if tail not in targets:
+            return None
+        arr = node
+        lead = arr.shape[:-2]              # stacked scan dims
+        d_in, d_out = arr.shape[-2:]
+        counter[0] += 1
+        ka = jax.random.fold_in(key, counter[0])
+        a = jax.random.normal(ka, lead + (r, d_in), jnp.float32) * std
+        b = jnp.zeros(lead + (d_out, r), jnp.float32)
+        return {"a": a.astype(arr.dtype), "b": b.astype(arr.dtype)}
+
+    return walk(params, ()) or {}
+
+
+def lora_tree_for_model(model, key, lora_cfg):
+    """LoRA tree from the model config alone (via eval_shape init)."""
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    shapes = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)
+    return init_lora(shapes, key, lora_cfg)
+
+
+def merge_lora(params, lora, gamma):
+    """W0 + gamma * B A merged into the base weights (inference-time,
+    zero-latency deployment — the paper's 'no inference cost' property)."""
+    def walk(p, l):
+        if isinstance(p, dict):
+            return {k: walk(v, l.get(k)) if isinstance(l, dict) and k in l
+                    else v for k, v in p.items()}
+        return p
+
+    def merge_node(p_node, l_node):
+        if not (isinstance(l_node, dict)):
+            return p_node
+        if set(l_node) == {"a", "b"}:
+            a, b = l_node["a"], l_node["b"]
+            delta = jnp.einsum("...or,...ri->...io", b, a) * gamma
+            return (p_node + delta.astype(p_node.dtype))
+        if isinstance(p_node, dict):
+            return {k: merge_node(v, l_node.get(k, None))
+                    for k, v in p_node.items()}
+        return p_node
+
+    return merge_node(params, lora)
+
+
+def num_lora_params(lora) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))
+
+
+def split_ab(lora):
+    """Split a LoRA tree into (A-only tree, B-only tree) with the same
+    structure — used by the selective-aggregation strategies."""
+    a = jax.tree.map(lambda x: x, lora)
+
+    def pick(node, which):
+        if isinstance(node, dict):
+            if set(node) == {"a", "b"}:
+                return {which: node[which]}
+            return {k: pick(v, which) for k, v in node.items()}
+        return node
+
+    return pick(lora, "a"), pick(lora, "b")

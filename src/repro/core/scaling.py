@@ -1,0 +1,63 @@
+"""LoRA scaling factors — the paper's central object.
+
+gamma multiplies the adapter product BA in  h = W0 x + gamma * B A x.
+
+  lora      gamma = alpha / r            (Hu et al., 2022)
+  rslora    gamma = alpha / sqrt(r)      (Kalajdzievski, 2023)
+  sfedlora  gamma = alpha * sqrt(N / r)  (this paper, Theorem 4.2)
+  za        gamma = 1 / (sqrt(N)*sqrt(r))  (paper App. B.3 — too small)
+  zb        gamma = N^2 / sqrt(r)          (paper App. B.3 — too large)
+
+The paper's derivation (App. A): with FedSA split aggregation the effective
+adapter magnitude carries E[A_bar^T A_bar] = (r/N) sigma_A^2 I, so moments
+scale as (gamma^2 * r / N)^h — Theta(1) iff gamma ~ sqrt(N/r).
+"""
+from __future__ import annotations
+
+import math
+
+
+def gamma_lora(alpha: float, r: int, n_clients: int = 1) -> float:
+    return alpha / r
+
+
+def gamma_rslora(alpha: float, r: int, n_clients: int = 1) -> float:
+    return alpha / math.sqrt(r)
+
+
+def gamma_sfedlora(alpha: float, r: int, n_clients: int) -> float:
+    return alpha * math.sqrt(n_clients / r)
+
+
+def gamma_za(alpha: float, r: int, n_clients: int) -> float:
+    # paper defines this candidate without alpha (eq. 24); keep it literal
+    return 1.0 / (math.sqrt(n_clients) * math.sqrt(r))
+
+
+def gamma_zb(alpha: float, r: int, n_clients: int) -> float:
+    # eq. 25
+    return n_clients ** 2 / math.sqrt(r)
+
+
+SCALINGS = {
+    "lora": gamma_lora,
+    "rslora": gamma_rslora,
+    "sfedlora": gamma_sfedlora,
+    "za": gamma_za,
+    "zb": gamma_zb,
+}
+
+
+def scaling_factor(name: str, alpha: float, r: int, n_clients: int) -> float:
+    """The adapter scale gamma for a given scheme."""
+    try:
+        return SCALINGS[name](alpha, r, n_clients)
+    except KeyError:
+        raise ValueError(f"unknown scaling '{name}'; options {list(SCALINGS)}")
+
+
+def predicted_moment_scale(gamma: float, r: int, n_clients: int) -> float:
+    """Theory (App. A eq. 23): adapter output first-moment scale after
+    aggregation goes as gamma^2 * r / N.  SFed-LoRA makes this alpha^2
+    independent of (N, r)."""
+    return gamma ** 2 * r / n_clients

@@ -1,0 +1,86 @@
+"""Flash-attention Pallas-TPU kernel (forward): online-softmax over KV blocks
+with causal and sliding-window masking.
+
+Grid (b*h, nq, nk), kv innermost; running (acc, m, l) live in VMEM scratch so
+the (s, t) score matrix never exists.  BlockSpec tiles are MXU-aligned
+(bq x d and bk x d with d a multiple of 128 in the full configs).  This is the
+TPU adaptation of the paper's attention hot spot; the pure-JAX blockwise path
+in repro/models/attention.py mirrors it for autodiff/CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, bq, bk, nk):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    sc = (q @ k.T) * scale                      # (bq, bk)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    sc = jnp.where(mask, sc, NEG_INF)
+
+    m_prev = m_ref[...]                         # (bq, 1)
+    m_new = jnp.maximum(m_prev, sc.max(axis=1, keepdims=True))
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, jnp.exp(sc - m_new))
+    corr = jnp.exp(m_prev - m_new)              # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, bq=512, bk=512,
+                    interpret=False):
+    """q (bh, s, d), k/v (bh, t, d) -> (bh, s, d).  Head folding and GQA
+    expansion happen in ops.flash_mha."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    bq, bk = min(bq, s), min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    nq, nk = s // bq, t // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, gamma):
+    """y = x @ w + gamma * (x @ a.T) @ b.T
+    x (m, k), w (k, n), a (r, k), b (n, r)."""
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    p = xf @ a.astype(jnp.float32).T
+    return (y + gamma * (p @ b.astype(jnp.float32).T)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q (b, s, h, d), k/v (b, t, h, d) (same head count — GQA expansion is
+    the wrapper's job).  Returns (b, s, h, d)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    pq = jnp.arange(s)[:, None]
+    pk = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= pk <= pq
+    if window is not None:
+        mask &= pq - pk < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Sequential reference for h_t = a_t * h_{t-1} + b_t.  a, b (bt, s, d)."""
+    bt, s, d = a.shape
+    h = jnp.zeros((bt, d), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    out = []
+    for tstep in range(s):
+        h = a[:, tstep].astype(jnp.float32) * h + b[:, tstep].astype(jnp.float32)
+        out.append(h)
+    return jnp.stack(out, axis=1).astype(a.dtype)

@@ -1,0 +1,40 @@
+"""Production mesh construction (TPU v5e target).
+
+Single pod : (16, 16)    axes ("data", "model")           = 256 chips
+Multi-pod  : (2, 16, 16) axes ("pod", "data", "model")    = 512 chips
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants for the roofline model (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (run in subprocesses with
+    --xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes)
+
+
+def client_axes(mesh) -> tuple:
+    """Mesh axes that carry the federated client dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_clients(mesh) -> int:
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,82 @@
+"""Federated LoRA fine-tuning launcher.
+
+CPU-scale (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+      --rank 64 --scaling sfedlora --clients 4 --rounds 30
+
+On a TPU mesh the same entry point builds the production mesh and shards the
+client dim over ("pod","data") — see launch/dryrun.py for the compile-only
+proof of that path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.checkpoint.io import save_federated_state
+from repro.configs import ARCHS, get_config
+from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
+from repro.core.federated import FederatedTrainer
+from repro.data.synthetic import FederatedDataset
+from repro.models.api import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant (CPU)")
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=8.0)
+    ap.add_argument("--scaling", default="sfedlora",
+                    choices=("lora", "rslora", "sfedlora", "za", "zb"))
+    ap.add_argument("--strategy", default="fedsa",
+                    choices=("fedit", "ffa", "fedsa", "rolora"))
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--optimizer", default="sgd", choices=("sgd", "adamw"))
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch-per-client", type=int, default=4)
+    ap.add_argument("--partition", default="iid",
+                    choices=("iid", "dirichlet"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    ds = FederatedDataset(cfg.vocab_size, args.clients, seq_len=args.seq,
+                          batch_per_client=args.batch_per_client,
+                          partition=args.partition, seed=args.seed)
+    tr = FederatedTrainer(
+        model, ds,
+        lora_cfg=LoRAConfig(rank=args.rank, alpha=args.alpha,
+                            scaling=args.scaling, targets=cfg.lora_targets),
+        fed_cfg=FederatedConfig(num_clients=args.clients,
+                                local_steps=args.local_steps,
+                                rounds=args.rounds,
+                                aggregation=args.strategy,
+                                partition=args.partition),
+        opt_cfg=OptimizerConfig(name=args.optimizer, lr=args.lr),
+        seed=args.seed)
+    print(f"# {args.arch}{' (reduced)' if args.reduced else ''}  "
+          f"strategy={args.strategy} scaling={args.scaling} "
+          f"gamma={tr.gamma:.4f} rank={args.rank} N={args.clients}")
+    tr.run(args.rounds, log_every=max(1, args.rounds // 10))
+    ppl = tr.eval_perplexity()
+    print(f"# final held-out perplexity: {ppl:.3f}")
+    if args.save:
+        save_federated_state(args.save, tr.base, tr.lora, tr.opt_state,
+                             tr.round_idx)
+        print(f"# saved -> {args.save}")
+    return tr
+
+
+if __name__ == "__main__":
+    main()

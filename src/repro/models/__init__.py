@@ -1,0 +1,10 @@
+# Dry-run switch: XLA's HloCostAnalysis counts while-loop bodies ONCE (no
+# trip-count multiplication), so scanned-layer models under-report flops/bytes
+# /collectives.  The dry-run sets FULL_UNROLL=True to unroll the layer stack,
+# attention block loops, and mLSTM chunk scans, making the compiled-module
+# statistics exact.  Training/serving keep scans (compact HLO).
+FULL_UNROLL = False
+
+
+def scan_unroll(length: int) -> int:
+    return length if FULL_UNROLL else 1

@@ -1,0 +1,219 @@
+"""Public model API: build_model(cfg) -> Model with init / forward / loss /
+init_cache / decode_step, uniform across all families (dense, moe, hybrid,
+ssm, vlm, audio)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import norm_params, apply_norm
+from repro.models.transformer import (apply_stack, decode_stack, init_stack,
+                                      init_stack_cache)
+
+PATCH_EMBED_DIM = 1152   # SigLIP stub output width (arXiv:2407.07726)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.vocab_padded = pad_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------- params
+    def init(self, key):
+        cfg = self.cfg
+        pdt = jnp.dtype(cfg.param_dtype)
+        ke, ks, kh, kenc, kp = jax.random.split(key, 5)
+        params = {
+            "embed": (jax.random.normal(ke, (self.vocab_padded, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(pdt),
+            "stack": init_stack(cfg, ks),
+        }
+        params.update(norm_params(cfg, cfg.d_model, "final"))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(
+                kh, (cfg.d_model, self.vocab_padded)) *
+                cfg.d_model ** -0.5).astype(pdt)
+        if cfg.family == "audio":
+            enc = {"stack": init_stack(cfg, kenc,
+                                       num_layers=cfg.encoder_layers,
+                                       pattern=("attn",))}
+            enc.update(norm_params(cfg, cfg.d_model, "encfinal"))
+            params["encoder"] = enc
+        if cfg.family == "vlm":
+            params["patch_proj"] = (jax.random.normal(
+                kp, (PATCH_EMBED_DIM, cfg.d_model)) *
+                PATCH_EMBED_DIM ** -0.5).astype(pdt)
+        return params
+
+    # ------------------------------------------------------------- forward
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x.astype(jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            patches = (batch["patches"] @ params["patch_proj"]).astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        enc = params["encoder"]
+        h, _ = apply_stack(cfg, enc["stack"],
+                           batch["frames"].astype(jnp.dtype(cfg.dtype)),
+                           causal=False, pattern=("attn",))
+        return apply_norm(cfg, h, enc, "encfinal")
+
+    def forward(self, params, batch, lora=None, gamma: float = 0.0):
+        """Full-sequence forward.  Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        enc_out = self._encode(params, batch) if cfg.family == "audio" else None
+        x, aux = apply_stack(cfg, params["stack"], x,
+                             lora=(lora or {}).get("stack"), gamma=gamma,
+                             positions=positions, enc_out=enc_out,
+                             causal=cfg.family != "encoder")
+        x = apply_norm(cfg, x, params, "final")
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = x @ head.astype(x.dtype)
+        return logits, aux
+
+    def loss(self, params, batch, lora=None, gamma: float = 0.0):
+        """Next-token CE over the text segment (+ MoE aux).  Encoder-only
+        models use MLM-style loss (mask every 5th token)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "encoder":
+            s = tokens.shape[1]
+            mask_id = self.vocab_padded - 1
+            masked_pos = (jnp.arange(s) % 5) == 2
+            inp = jnp.where(masked_pos[None, :], mask_id, tokens)
+            logits, aux = self.forward(params, {**batch, "tokens": inp},
+                                       lora=lora, gamma=gamma)
+            lf = logits.astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(lf, axis=-1)
+            ll = jnp.take_along_axis(lf, tokens[..., None], axis=-1)[..., 0]
+            per_tok = (lse - ll) * masked_pos[None, :]
+            ce = per_tok.sum() / (masked_pos.sum() * tokens.shape[0])
+            return ce + aux, {"ce": ce, "aux": aux}
+        from repro.sharding import opts
+        if opts.enabled("chunked_ce"):
+            return self._loss_chunked(params, batch, lora, gamma)
+        logits, aux = self.forward(params, batch, lora=lora, gamma=gamma)
+        s_text = tokens.shape[1]
+        logits = logits[:, -s_text:][:, :-1]
+        labels = tokens[:, 1:]
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+        ce = (lse - ll).mean()
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def _loss_chunked(self, params, batch, lora, gamma, chunk: int = 512):
+        """CE computed in sequence chunks: the full (b, s, V) logits tensor
+        never materializes — the head matmul + logsumexp + label gather run
+        per chunk inside a scan (beyond-paper memory-term optimization)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        enc_out = self._encode(params, batch) if cfg.family == "audio" else None
+        x, aux = apply_stack(cfg, params["stack"], x,
+                             lora=(lora or {}).get("stack"), gamma=gamma,
+                             positions=positions, enc_out=enc_out,
+                             causal=cfg.family != "encoder")
+        x = apply_norm(cfg, x, params, "final")
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        s_text = tokens.shape[1]
+        x = x[:, -s_text:][:, :-1]                    # predict positions
+        labels = tokens[:, 1:]
+        sl = x.shape[1]
+        c = min(chunk, sl)
+        pad = (-sl) % c
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        lp = jnp.pad(labels, ((0, 0), (0, pad)))
+        valid = jnp.pad(jnp.ones((b, sl), bool), ((0, 0), (0, pad)))
+        nc = xp.shape[1] // c
+        xc = xp.reshape(b, nc, c, -1).swapaxes(0, 1)
+        lc = lp.reshape(b, nc, c).swapaxes(0, 1)
+        vc = valid.reshape(b, nc, c).swapaxes(0, 1)
+
+        def chunk_step(tot, xs):
+            xb, lb, vb = xs
+            logits = (xb @ head.astype(xb.dtype)).astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, lb[..., None], -1)[..., 0]
+            return tot + jnp.sum((lse - ll) * vb), None
+
+        tot, _ = jax.lax.scan(jax.checkpoint(chunk_step),
+                              jnp.zeros((), jnp.float32), (xc, lc, vc))
+        ce = tot / (b * sl)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        cross = cfg.encoder_frames if cfg.family == "audio" else 0
+        return init_stack_cache(cfg, batch, max_len, dtype, cross_len=cross)
+
+    def decode_step(self, params, cache, token, pos, lora=None,
+                    gamma: float = 0.0):
+        """One token: token (b,1) int32, pos (b,) absolute position.
+        Returns (logits (b,1,V), new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
+        x, new_cache = decode_stack(cfg, params["stack"], cache, x, pos,
+                                    lora=(lora or {}).get("stack"),
+                                    gamma=gamma)
+        x = apply_norm(cfg, x, params, "final")
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return x @ head.astype(x.dtype), new_cache
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape, *, n_clients: int = 0, dtype=None):
+        """ShapeDtypeStruct stand-ins for every model input of an InputShape.
+
+        For train shapes with ``n_clients``>0 the batch gets a leading client
+        dim (global_batch = n_clients * per_client).  Modality frontends are
+        stubs: precomputed frame/patch embeddings of the right shape."""
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        def batch_spec(b, s):
+            d = {"tokens": sds((b, s), i32)}
+            if cfg.family == "vlm":
+                d["tokens"] = sds((b, s - cfg.num_patches), i32)
+                d["patches"] = sds((b, cfg.num_patches, PATCH_EMBED_DIM), dt)
+            if cfg.family == "audio":
+                d["frames"] = sds((b, cfg.encoder_frames, cfg.d_model), dt)
+            return d
+
+        if shape.kind == "train":
+            b, s = shape.global_batch, shape.seq_len
+            if n_clients:
+                per = b // n_clients
+                spec = batch_spec(per, s)
+                return {k: sds((n_clients,) + v.shape, v.dtype)
+                        for k, v in spec.items()}
+            return batch_spec(b, s)
+        if shape.kind == "prefill":
+            return batch_spec(shape.global_batch, shape.seq_len)
+        # decode: one token + cache of seq_len
+        b = shape.global_batch
+        cache = jax.eval_shape(
+            lambda: self.init_cache(b, shape.seq_len, dtype=dt))
+        return {"token": sds((b, 1), i32), "pos": sds((b,), i32),
+                "cache": cache}
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,234 @@
+"""GQA/MQA attention: full-sequence (train/prefill) and single-token decode.
+
+Supports causal masking, sliding windows, qk-norm, logit soft-capping, and
+bidirectional (encoder) attention.  Softmax always runs in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scan_unroll
+from repro.models.layers import apply_rope, linear, rms_norm
+from repro.sharding import opts
+from repro.sharding.specs import constrain
+
+NEG_INF = -1e30
+
+
+def _maybe_expand_kv(cfg, q, k, v):
+    """Under the ``expand_kv`` opt: repeat KV heads to the full head count and
+    constrain the head dim onto the `model` axis, so attention shards by head
+    instead of computing (partially) replicated when kv_heads < axis size."""
+    if not opts.enabled("expand_kv"):
+        return q, k, v
+    h = q.shape[2]
+    kh = k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    spec = (("pod", "data"), None, "model", None)
+    return (constrain(q, spec), constrain(k, spec), constrain(v, spec))
+
+
+def attn_params(cfg, key, *, cross: bool = False, d_model=None):
+    d = d_model or cfg.d_model
+    pdt = jnp.dtype(cfg.param_dtype)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "q": (jax.random.normal(kq, (d, cfg.q_dim)) * s).astype(pdt),
+        "k": (jax.random.normal(kk, (d, cfg.kv_dim)) * s).astype(pdt),
+        "v": (jax.random.normal(kv, (d, cfg.kv_dim)) * s).astype(pdt),
+        "o": (jax.random.normal(ko, (cfg.q_dim, d)) * (cfg.q_dim ** -0.5)).astype(pdt),
+    }
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.ones((cfg.head_dim,), pdt)
+        p["k_norm_scale"] = jnp.ones((cfg.head_dim,), pdt)
+    return p
+
+
+def _project_qkv(cfg, params, x, kv_x=None, lora=None, gamma=0.0, positions=None,
+                 kv_positions=None, use_rope=True):
+    """Returns q (b,s,h,hd), k/v (b,t,kh,hd) with RoPE + qk-norm applied."""
+    kv_x = x if kv_x is None else kv_x
+    b, s, _ = x.shape
+    t = kv_x.shape[1]
+    lq = (lora or {}).get("q")
+    lk = (lora or {}).get("k")
+    lv = (lora or {}).get("v")
+    q = linear(x, params["q"], lq, gamma).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = linear(kv_x, params["k"], lk, gamma).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(kv_x, params["v"], lv, gamma).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm_scale"])
+        k = rms_norm(k, params["k_norm_scale"])
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        if kv_positions is None:
+            kv_positions = jnp.arange(t)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_core(cfg, q, k, v, mask):
+    """q (b,s,h,hd), k/v (b,t,kh,hd), mask (b,1,s,t) or (b,kh,g,s,t)-broadcastable."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def make_mask(positions_q, positions_kv, *, causal: bool, window=None,
+              valid_kv=None):
+    """(b, s_q, s_kv) boolean mask."""
+    pq = positions_q[:, :, None]
+    pk = positions_kv[:, None, :]
+    m = jnp.ones(jnp.broadcast_shapes(pq.shape, pk.shape), bool)
+    if causal:
+        m &= pk <= pq
+    if window is not None:
+        m &= pq - pk < window
+    if valid_kv is not None:
+        m &= valid_kv[:, None, :]
+    return m
+
+
+BLOCKWISE_THRESHOLD = 2048   # use flash-style blocked attention above this
+Q_BLOCK = 1024
+KV_BLOCK = 1024
+
+
+def blockwise_attention(cfg, q, k, v, positions_q, positions_kv, *, causal,
+                        window):
+    """Flash-style attention in pure JAX: outer scan over q blocks, inner
+    remat'd scan over kv blocks carrying (acc, m, l).  Memory O(s*hd);
+    backward recomputes blocks (scan + jax.checkpoint) instead of storing
+    the (s, t) score matrix.  The Pallas kernel in repro/kernels mirrors this
+    on real TPUs."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    bq = min(Q_BLOCK, s)
+    bk = min(KV_BLOCK, t)
+    nq, nk = -(-s // bq), -(-t // bk)
+    pad_q, pad_k = nq * bq - s, nk * bk - t
+    qf = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    pq = jnp.pad(positions_q, ((0, 0), (0, pad_q)), constant_values=-1)
+    pk = jnp.pad(positions_kv, ((0, 0), (0, pad_k)), constant_values=2**30)
+    qf = qf.reshape(b, nq, bq, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kf = kf.reshape(b, nk, bk, kh, hd).transpose(1, 0, 2, 3, 4)
+    vf = vf.reshape(b, nk, bk, kh, hd).transpose(1, 0, 2, 3, 4)
+    pqb = pq.reshape(b, nq, bq).transpose(1, 0, 2)
+    pkb = pk.reshape(b, nk, bk).transpose(1, 0, 2)
+    scale = hd ** -0.5
+
+    def kv_step(carry, xs):
+        acc, m, l, qblk, pq_blk = carry
+        kblk, vblk, pk_blk = xs
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk) * scale
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            sc = c * jnp.tanh(sc / c)
+        msk = make_mask(pq_blk, pk_blk, causal=causal, window=window)
+        sc = jnp.where(msk[:, None, None, :, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.where(sc <= NEG_INF / 2, 0.0, jnp.exp(sc - m_new[..., None]))
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, vblk)
+        return (acc_new, m_new, l_new, qblk, pq_blk), None
+
+    def q_block(qblk, pq_blk):
+        if opts.enabled("seq_parallel_attn") and h % 16 != 0:
+            # context parallelism: shard the query block's seq dim over
+            # `model` when heads can't divide the axis (8-head archs)
+            qblk = constrain(qblk, (None, "model", None, None, None))
+        acc0 = jnp.zeros((b, kh, g, bq, hd), jnp.float32)
+        m0 = jnp.full((b, kh, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, bq), jnp.float32)
+        (acc, m, l, _, _), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, l0, qblk, pq_blk),
+            (kf, vf, pkb), unroll=scan_unroll(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, bq, h, hd)
+
+    _, outs = jax.lax.scan(lambda _, xs: (None, q_block(*xs)), None,
+                           (qf, pqb), unroll=scan_unroll(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * bq, h, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+def attention_fullseq(cfg, params, x, *, causal=True, lora=None, gamma=0.0,
+                      positions=None, kv_x=None, use_rope=True, window=None):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    kv_pos = (positions if kv_x is None else
+              jnp.broadcast_to(jnp.arange(kv_x.shape[1])[None, :], (b, kv_x.shape[1])))
+    q, k, v = _project_qkv(cfg, params, x, kv_x=kv_x, lora=lora, gamma=gamma,
+                           positions=positions, kv_positions=kv_pos,
+                           use_rope=use_rope)
+    win = window if window is not None else cfg.attn_window
+    t = k.shape[1]
+    q, k, v = _maybe_expand_kv(cfg, q, k, v)
+    if max(s, t) > BLOCKWISE_THRESHOLD:
+        out = blockwise_attention(cfg, q, k, v, positions, kv_pos,
+                                  causal=causal, window=win if causal else None)
+    else:
+        mask = make_mask(positions, kv_pos, causal=causal,
+                         window=win if causal else None)
+        out = attention_core(cfg, q, k, v, mask)
+    lo = (lora or {}).get("o")
+    return linear(out.reshape(b, s, -1), params["o"], lo, gamma)
+
+
+# ----------------------------------------------------------------- KV cache decode
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype):
+    """Per-layer cache: ring buffer when cfg.attn_window is set."""
+    size = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def attention_decode(cfg, params, x, cache, pos, *, lora=None, gamma=0.0):
+    """One-token decode.  x (b,1,d); pos (b,) current absolute position.
+
+    Returns (out (b,1,d), new_cache).  Ring-buffer writes for sliding window.
+    """
+    b = x.shape[0]
+    size = cache["k"].shape[1]
+    q, k, v = _project_qkv(cfg, params, x, lora=lora, gamma=gamma,
+                           positions=pos[:, None], kv_positions=pos[:, None])
+    slot = pos % size                                   # (b,)
+    bidx = jnp.arange(b)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+    new_pos = cache["pos"].at[bidx, slot].set(pos)
+    valid = new_pos >= 0
+    mask = make_mask(pos[:, None], new_pos, causal=True,
+                     window=cfg.attn_window, valid_kv=valid)
+    out = attention_core(cfg, q, new_k, new_v, mask)
+    lo = (lora or {}).get("o")
+    y = linear(out.reshape(b, 1, -1), params["o"], lo, gamma)
+    return y, {"k": new_k, "v": new_v, "pos": new_pos}

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts MLP: top-k routing, capacity-based scatter dispatch,
+shared (always-on) experts, and a Switch-style load-balance auxiliary loss.
+
+Expert weights are stacked ``(E, d, ff)`` so the expert dim shards over the
+``model`` mesh axis (expert parallelism); token->expert dispatch is a scatter
+that GSPMD lowers to all-to-all style collectives on the mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import constrain
+
+
+def padded_experts(m) -> int:
+    """Pad the expert count to a multiple of 16 for clean 16-way expert
+    parallelism on the `model` mesh axis (e.g. qwen2-moe 60 -> 64).  The
+    router stays at the logical count, so padded experts never receive
+    tokens."""
+    e = m.num_experts
+    return e if e <= 16 else -(-e // 16) * 16
+
+
+def moe_params(cfg, key):
+    m = cfg.moe
+    d = cfg.d_model
+    pdt = jnp.dtype(cfg.param_dtype)
+    kr, kg, ku, kd, ksg, ksu, ksd, kgt = jax.random.split(key, 8)
+    e = padded_experts(m)
+    ff = m.d_ff_expert
+    s = d ** -0.5
+    p = {
+        "router": (jax.random.normal(kr, (d, m.num_experts)) * s).astype(pdt),
+        "w_gate": (jax.random.normal(kg, (e, d, ff)) * s).astype(pdt),
+        "w_up": (jax.random.normal(ku, (e, d, ff)) * s).astype(pdt),
+        "w_down": (jax.random.normal(kd, (e, ff, d)) * (ff ** -0.5)).astype(pdt),
+    }
+    if m.num_shared_experts:
+        sf = m.d_ff_shared
+        p["shared_gate"] = (jax.random.normal(ksg, (d, sf)) * s).astype(pdt)
+        p["shared_up"] = (jax.random.normal(ksu, (d, sf)) * s).astype(pdt)
+        p["shared_down"] = (jax.random.normal(ksd, (sf, d)) * (sf ** -0.5)).astype(pdt)
+        p["shared_router"] = (jax.random.normal(kgt, (d, 1)) * s).astype(pdt)
+    return p
+
+
+def moe_apply(cfg, params, x):
+    """x (b, s, d) -> (out (b, s, d), aux_loss scalar)."""
+    from repro.sharding.opts import enabled
+    if enabled("moe_grouped"):
+        return _moe_apply_grouped(cfg, params, x)
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    ep = padded_experts(m)
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (t, e)
+    top_p, top_i = jax.lax.top_k(probs, k)                       # (t, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux (Switch): E * sum_e frac_tokens_e * mean_prob_e
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)          # (t, k, e)
+    assign = onehot.sum(1)                                        # (t, e)
+    frac = assign.mean(0)
+    aux = e * jnp.sum(frac * probs.mean(0)) * m.router_aux_coef
+
+    # ---- capacity + position-in-expert
+    cap = max(1, int(t * k / e * m.capacity_factor))
+    cap = -(-cap // 8) * 8                                        # align
+    pos = (jnp.cumsum(assign, axis=0) - 1)                        # (t, e) position
+    pos_k = jnp.take_along_axis(pos, top_i, axis=1).astype(jnp.int32)  # (t, k)
+    keep = (pos_k < cap)
+    w = jnp.where(keep, top_p, 0.0)                               # (t, k)
+
+    # ---- scatter tokens into (ep*cap, d) expert buffers
+    flat_idx = jnp.where(keep, top_i * cap + pos_k, ep * cap)     # drop -> OOB slot
+    buf = jnp.zeros((ep * cap + 1, d), xf.dtype)
+    src = jnp.repeat(xf[:, None, :], k, axis=1).reshape(t * k, d)
+    buf = buf.at[flat_idx.reshape(-1)].add(src)
+    ex_in = buf[:-1].reshape(ep, cap, d)
+    ex_in = constrain(ex_in, ("model", None, None))
+
+    # ---- expert FFN (swiglu), expert dim sharded over `model`
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", ex_in, params["w_up"])
+    ex_out = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+    ex_out = constrain(ex_out, ("model", None, None))
+
+    # ---- gather back and combine with routing weights
+    flat_out = jnp.concatenate(
+        [ex_out.reshape(ep * cap, d), jnp.zeros((1, d), ex_out.dtype)], 0)
+    tok_out = flat_out[flat_idx]                                  # (t, k, d)
+    out = jnp.einsum("tkd,tk->td", tok_out.astype(jnp.float32),
+                     w.astype(jnp.float32))
+
+    # ---- shared experts (always on)
+    if m.num_shared_experts:
+        sg = jax.nn.silu(xf @ params["shared_gate"]) * (xf @ params["shared_up"])
+        sh = sg @ params["shared_down"]
+        gate = jax.nn.sigmoid(xf.astype(jnp.float32) @
+                              params["shared_router"].astype(jnp.float32))
+        out = out + gate * sh.astype(jnp.float32)
+
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_apply_grouped(cfg, params, x):
+    """Grouped dispatch (beyond-paper, GShard-style): each batch row is a
+    routing group with its own capacity, so the position-in-expert cumsum and
+    the dispatch scatter are group-local.  Buffers shard 2D:
+    (group->data, expert->model) — the global-cumsum serialization and the
+    cross-shard scatter all-reduce of the flat path disappear."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    ep = padded_experts(m)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                       # (b, s, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)          # (b, s, k, e)
+    assign = onehot.sum(2)                                        # (b, s, e)
+    frac = assign.mean((0, 1))
+    aux = e * jnp.sum(frac * probs.mean((0, 1))) * m.router_aux_coef
+
+    cap = max(1, int(s * k / e * m.capacity_factor))
+    cap = -(-cap // 8) * 8
+    pos = jnp.cumsum(assign, axis=1) - 1                          # per group
+    pos_k = jnp.take_along_axis(pos, top_i, axis=2).astype(jnp.int32)
+    keep = pos_k < cap
+    w = jnp.where(keep, top_p, 0.0)
+
+    flat_idx = jnp.where(keep, top_i * cap + pos_k, ep * cap)     # (b, s, k)
+    flat_idx = flat_idx.reshape(b, s * k)
+    src = jnp.repeat(x[:, :, None, :], k, axis=2).reshape(b, s * k, d)
+    buf = jnp.zeros((b, ep * cap + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(b)[:, None], flat_idx].add(src)
+    ex_in = buf[:, :-1].reshape(b, ep, cap, d)
+    ex_in = constrain(ex_in, (("pod", "data"), "model", None, None))
+
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", ex_in, params["w_gate"]))
+    u = jnp.einsum("becd,edf->becf", ex_in, params["w_up"])
+    ex_out = jnp.einsum("becf,efd->becd", g * u, params["w_down"])
+    ex_out = constrain(ex_out, (("pod", "data"), "model", None, None))
+
+    flat_out = jnp.concatenate(
+        [ex_out.reshape(b, ep * cap, d),
+         jnp.zeros((b, 1, d), ex_out.dtype)], axis=1)
+    tok_out = jnp.take_along_axis(flat_out, flat_idx[..., None], axis=1)
+    tok_out = tok_out.reshape(b, s, k, d)
+    out = jnp.einsum("bskd,bsk->bsd", tok_out.astype(jnp.float32),
+                     w.astype(jnp.float32))
+
+    if m.num_shared_experts:
+        xf = x.reshape(b * s, d)
+        sg = jax.nn.silu(xf @ params["shared_gate"]) * (xf @ params["shared_up"])
+        sh = (sg @ params["shared_down"]).reshape(b, s, d)
+        gate = jax.nn.sigmoid(jnp.einsum(
+            "bsd,do->bso", x.astype(jnp.float32),
+            params["shared_router"].astype(jnp.float32)))
+        out = out + gate * sh.astype(jnp.float32)
+
+    return out.astype(x.dtype), aux

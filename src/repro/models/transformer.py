@@ -1,0 +1,315 @@
+"""Generic block-stack transformer machinery.
+
+A model is a stack of blocks drawn from ``cfg.block_pattern`` (repeated to
+``num_layers``).  Full repeats of the pattern run under one ``jax.lax.scan``
+(stacked params — keeps HLO size independent of depth); the remainder runs
+unrolled.  Every block kind supports:
+
+  init_block(cfg, key, kind)                      -> params pytree
+  apply_block(..., mode="fullseq")                -> (x, aux)
+  init_block_cache(cfg, kind, batch, max_len)     -> cache pytree
+  apply_block(..., mode="decode", cache=, pos=)   -> (x, aux, cache)
+
+Kinds: "attn" (GQA attention + MLP/MoE), "xattn" (self+cross attention + MLP,
+for encoder-decoder), "rglru" (RG-LRU temporal mix + MLP), "mlstm", "slstm".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import scan_unroll
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import (attn_params, attention_fullseq,
+                                    attention_decode, init_kv_cache,
+                                    _project_qkv, attention_core, make_mask)
+from repro.models.layers import (apply_norm, linear, mlp_apply, mlp_params,
+                                 norm_params)
+from repro.models.moe import moe_apply, moe_params
+
+
+# ----------------------------------------------------------------- block init
+
+def init_block(cfg, key, kind: str):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {}
+    if kind in ("attn", "xattn"):
+        p.update(norm_params(cfg, d, "ln1"))
+        p["attn"] = attn_params(cfg, ks[0])
+        if kind == "xattn":
+            p.update(norm_params(cfg, d, "lnx"))
+            p["cross"] = attn_params(cfg, ks[1])
+        p.update(norm_params(cfg, d, "ln2"))
+        if cfg.moe is not None:
+            p["moe"] = moe_params(cfg, ks[2])
+        else:
+            p["mlp"] = mlp_params(cfg, ks[2], d, cfg.d_ff)
+    elif kind == "rglru":
+        p.update(norm_params(cfg, d, "ln1"))
+        p["rglru"] = rglru_mod.rglru_params(cfg, ks[0])
+        p.update(norm_params(cfg, d, "ln2"))
+        p["mlp"] = mlp_params(cfg, ks[1], d, cfg.d_ff)
+    elif kind == "mlstm":
+        p.update(norm_params(cfg, d, "ln1"))
+        p["mlstm"] = xlstm_mod.mlstm_params(cfg, ks[0])
+    elif kind == "slstm":
+        p.update(norm_params(cfg, d, "ln1"))
+        p["slstm"] = xlstm_mod.slstm_params(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_block_cache(cfg, kind: str, batch: int, max_len: int, dtype,
+                     cross_len: int = 0):
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "xattn":
+        return {"self": init_kv_cache(cfg, batch, max_len, dtype),
+                "cross_k": jnp.zeros((batch, cross_len, cfg.num_kv_heads,
+                                      cfg.head_dim), dtype),
+                "cross_v": jnp.zeros((batch, cross_len, cfg.num_kv_heads,
+                                      cfg.head_dim), dtype)}
+    if kind == "rglru":
+        return rglru_mod.rglru_init_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_init_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_mod.slstm_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- block apply
+
+def _cross_attention(cfg, params, x, ck, cv, lora=None, gamma=0.0):
+    """Cross-attention against precomputed encoder K/V (no masking, no RoPE)."""
+    b, s, _ = x.shape
+    lq = (lora or {}).get("q")
+    q = linear(x, params["q"], lq, gamma).reshape(b, s, cfg.num_heads,
+                                                  cfg.head_dim)
+    mask = jnp.ones((b, s, ck.shape[1]), bool)
+    out = attention_core(cfg, q, ck, cv, mask)
+    return linear(out.reshape(b, s, -1), params["o"], (lora or {}).get("o"),
+                  gamma)
+
+
+def build_cross_kv(cfg, p_cross, enc_out):
+    """Project encoder output to per-layer cross K/V (no RoPE)."""
+    b, t, _ = enc_out.shape
+    k = (enc_out @ p_cross["k"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc_out @ p_cross["v"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def apply_block(cfg, kind, p, x, *, lora=None, gamma=0.0, positions=None,
+                causal=True, mode="fullseq", cache=None, pos=None,
+                enc_out=None):
+    lora = lora or {}
+    aux = jnp.zeros((), jnp.float32)
+    h1 = apply_norm(cfg, x, p, "ln1")
+    new_cache = None
+
+    if kind in ("attn", "xattn"):
+        if mode == "fullseq":
+            a = attention_fullseq(cfg, p["attn"], h1, causal=causal,
+                                  lora=lora.get("attn"), gamma=gamma,
+                                  positions=positions)
+        else:
+            a, self_cache = attention_decode(
+                cfg, p["attn"], h1, cache["self"] if kind == "xattn" else cache,
+                pos, lora=lora.get("attn"), gamma=gamma)
+        x = x + a
+        if kind == "xattn":
+            hx = apply_norm(cfg, x, p, "lnx")
+            if mode == "decode":
+                ck, cv = cache["cross_k"], cache["cross_v"]
+            else:
+                ck, cv = build_cross_kv(cfg, p["cross"], enc_out)
+            x = x + _cross_attention(cfg, p["cross"], hx, ck, cv,
+                                     lora=lora.get("cross"), gamma=gamma)
+        h2 = apply_norm(cfg, x, p, "ln2")
+        if cfg.moe is not None:
+            mo, aux = moe_apply(cfg, p["moe"], h2)
+            x = x + mo
+        else:
+            x = x + mlp_apply(cfg, p["mlp"], h2)
+        if mode == "decode":
+            new_cache = ({"self": self_cache, "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]} if kind == "xattn"
+                         else self_cache)
+
+    elif kind == "rglru":
+        if mode == "fullseq":
+            r = rglru_mod.rglru_apply_fullseq(cfg, p["rglru"], h1,
+                                              lora.get("rglru"), gamma)
+        else:
+            r, new_cache = rglru_mod.rglru_apply_decode(
+                cfg, p["rglru"], h1, cache, pos, lora.get("rglru"), gamma)
+        x = x + r
+        h2 = apply_norm(cfg, x, p, "ln2")
+        x = x + mlp_apply(cfg, p["mlp"], h2)
+
+    elif kind == "mlstm":
+        if mode == "fullseq":
+            m = xlstm_mod.mlstm_apply_fullseq(cfg, p["mlstm"], h1,
+                                              lora.get("mlstm"), gamma)
+        else:
+            m, new_cache = xlstm_mod.mlstm_apply_decode(
+                cfg, p["mlstm"], h1, cache, pos, lora.get("mlstm"), gamma)
+        x = x + m
+
+    elif kind == "slstm":
+        if mode == "fullseq":
+            s_ = xlstm_mod.slstm_apply_fullseq(cfg, p["slstm"], h1,
+                                               lora.get("slstm"), gamma)
+        else:
+            s_, new_cache = xlstm_mod.slstm_apply_decode(
+                cfg, p["slstm"], h1, cache, pos, lora.get("slstm"), gamma)
+        x = x + s_
+    else:
+        raise ValueError(kind)
+
+    if mode == "fullseq":
+        return x, aux
+    return x, aux, new_cache
+
+
+# ----------------------------------------------------------------- the stack
+
+def stack_layout(num_layers: int, pattern):
+    m = len(pattern)
+    return num_layers // m, tuple(pattern[:num_layers % m])
+
+
+def init_stack(cfg, key, *, num_layers=None, pattern=None):
+    num_layers = num_layers or cfg.num_layers
+    pattern = pattern or cfg.block_pattern
+    repeats, tail = stack_layout(num_layers, pattern)
+    k_rep, k_tail = jax.random.split(key)
+    out = {"repeat": {}, "tail": {}}
+    if repeats:
+        for j, kind in enumerate(pattern):
+            keys = jax.random.split(jax.random.fold_in(k_rep, j), repeats)
+            out["repeat"][f"p{j}"] = jax.vmap(
+                lambda k, kd=kind: init_block(cfg, k, kd))(keys)
+    for i, kind in enumerate(tail):
+        out["tail"][f"t{i}"] = init_block(cfg, jax.random.fold_in(k_tail, i),
+                                          kind)
+    return out
+
+
+def init_stack_cache(cfg, batch, max_len, dtype, *, num_layers=None,
+                     pattern=None, cross_len=0):
+    num_layers = num_layers or cfg.num_layers
+    pattern = pattern or cfg.block_pattern
+    repeats, tail = stack_layout(num_layers, pattern)
+    mk = lambda kind: init_block_cache(cfg, kind, batch, max_len, dtype,
+                                       cross_len=cross_len)
+    out = {"repeat": {}, "tail": {}}
+    if repeats:
+        for j, kind in enumerate(pattern):
+            out["repeat"][f"p{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (repeats,) + a.shape).copy(),
+                mk(kind))
+    for i, kind in enumerate(tail):
+        out["tail"][f"t{i}"] = mk(kind)
+    return out
+
+
+def apply_stack(cfg, stack_params, x, *, lora=None, gamma=0.0, positions=None,
+                causal=True, pattern=None, remat=True, enc_out=None):
+    """Full-sequence forward.  Returns (x, aux_sum)."""
+    pattern = pattern or cfg.block_pattern
+    lora = lora or {}
+    rep_p = stack_params.get("repeat", {})
+    rep_lora = lora.get("repeat") or _empty_like_stack(rep_p)
+
+    def one_rep(h, xs):
+        ps, los = xs
+        from repro.sharding import opts as _opts
+        if _opts.enabled("seq_parallel_residual"):
+            from repro.sharding.specs import constrain as _constrain
+            h = _constrain(h, (None, "model", None))
+        aux = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(pattern):
+            h, a = apply_block(cfg, kind, ps[f"p{j}"], h,
+                               lora=los.get(f"p{j}"), gamma=gamma,
+                               positions=positions, causal=causal,
+                               enc_out=enc_out)
+            aux = aux + a
+        return h, aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if rep_p:
+        from repro.sharding import opts
+        if remat and opts.enabled("remat_dots"):
+            # save matmul outputs across the scan, recompute only elementwise
+            body = jax.checkpoint(
+                one_rep,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif remat:
+            body = jax.checkpoint(one_rep)
+        else:
+            body = one_rep
+        n_rep = jax.tree.leaves(rep_p)[0].shape[0]
+        x, auxs = jax.lax.scan(body, x, (rep_p, rep_lora),
+                               unroll=scan_unroll(n_rep))
+        aux_total = aux_total + auxs.sum()
+    kinds = _tail_kinds(cfg, pattern, stack_params)
+    for i, kind in enumerate(kinds):
+        x, a = apply_block(cfg, kind, stack_params["tail"][f"t{i}"], x,
+                           lora=(lora.get("tail") or {}).get(f"t{i}"),
+                           gamma=gamma, positions=positions, causal=causal,
+                           enc_out=enc_out)
+        aux_total = aux_total + a
+    return x, aux_total
+
+
+def _tail_kinds(cfg, pattern, stack_params):
+    n_tail = len(stack_params.get("tail") or {})
+    return tuple(pattern[:n_tail])
+
+
+def decode_stack(cfg, stack_params, cache, x, pos, *, lora=None, gamma=0.0,
+                 pattern=None):
+    """One-token decode through the stack.  Returns (x, new_cache)."""
+    pattern = pattern or cfg.block_pattern
+    lora = lora or {}
+    rep_p = stack_params.get("repeat", {})
+    rep_lora = lora.get("repeat") or _empty_like_stack(rep_p)
+
+    def scan_body(h, xs):
+        ps, los, cs = xs
+        new_cs = {}
+        for j, kind in enumerate(pattern):
+            h, _, nc = apply_block(cfg, kind, ps[f"p{j}"], h,
+                                   lora=los.get(f"p{j}"), gamma=gamma,
+                                   mode="decode", cache=cs[f"p{j}"], pos=pos)
+            new_cs[f"p{j}"] = nc
+        return h, new_cs
+
+    new_cache = {"repeat": {}, "tail": {}}
+    if rep_p:
+        n_rep = jax.tree.leaves(rep_p)[0].shape[0]
+        x, new_cache["repeat"] = jax.lax.scan(
+            scan_body, x, (rep_p, rep_lora, cache["repeat"]),
+            unroll=scan_unroll(n_rep))
+    kinds = _tail_kinds(cfg, pattern, stack_params)
+    for i, kind in enumerate(kinds):
+        key = f"t{i}"
+        x, _, nc = apply_block(cfg, kind, stack_params["tail"][key], x,
+                               lora=(lora.get("tail") or {}).get(key),
+                               gamma=gamma, mode="decode",
+                               cache=cache["tail"][key], pos=pos)
+        new_cache["tail"][key] = nc
+    return x, new_cache
+
+
+def _empty_like_stack(rep_p):
+    """LoRA-free stand-in (no leaves, scans alongside params)."""
+    return {k: {} for k in rep_p}

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import make_optimizer, sgd, adamw, clip_by_global_norm

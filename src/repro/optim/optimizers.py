@@ -1,0 +1,91 @@
+"""Minimal optax-like optimizers (optax is not installed in this container).
+
+An optimizer is ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def _lr_at(lr, t):
+    return lr(t) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0):
+    """``lr`` may be a float or a schedule callable t -> lr."""
+    def init(params):
+        state = {"t": jnp.zeros((), jnp.int32)}
+        if momentum != 0.0:
+            state["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        step = _lr_at(lr, t)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -step * g, grads), {"t": t}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        return jax.tree.map(lambda m: -step * m, mu), {"mu": mu, "t": t}
+
+    return init, update
+
+
+def adamw(lr, betas=(0.9, 0.999), eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    b1, b2 = betas
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        step = _lr_at(lr, t)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            d = m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps)
+            return -step * (d + weight_decay * p)
+
+        return (jax.tree.map(upd, m, v, params),
+                {"m": m, "v": v, "t": t})
+
+    return init, update
+
+
+def make_optimizer(cfg):
+    """cfg: OptimizerConfig (lr_schedule: constant | warmup_cosine | step)."""
+    lr = cfg.lr
+    if getattr(cfg, "lr_schedule", "constant") != "constant":
+        from repro.optim.schedules import make_schedule
+        lr = make_schedule(cfg.lr_schedule, cfg.lr,
+                           **getattr(cfg, "lr_schedule_kwargs", {}) or {})
+    if cfg.name == "sgd":
+        return sgd(lr, cfg.momentum)
+    if cfg.name == "adamw":
+        return adamw(lr, cfg.betas, cfg.eps, cfg.weight_decay)
+    raise ValueError(cfg.name)

@@ -1,0 +1,38 @@
+"""Learning-rate schedules (callable lr support for the optimizers)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = peak_lr * t / max(warmup_steps, 1)
+        prog = jnp.clip((t - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(t < warmup_steps, warm, cos)
+    return lr
+
+
+def step_decay(lr0: float, decay: float, every: int):
+    def lr(t):
+        return lr0 * decay ** (jnp.asarray(t, jnp.float32) // every)
+    return lr
+
+
+def make_schedule(name: str, lr: float, **kw):
+    if name == "constant":
+        return constant(lr)
+    if name == "warmup_cosine":
+        return warmup_cosine(lr, kw.get("warmup_steps", 50),
+                             kw.get("total_steps", 1000))
+    if name == "step":
+        return step_decay(lr, kw.get("decay", 0.5), kw.get("every", 100))
+    raise ValueError(f"unknown schedule '{name}'")

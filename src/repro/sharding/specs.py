@@ -1,0 +1,95 @@
+"""Sharding rules + an in-model constraint helper that no-ops off-mesh."""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axis_in_mesh(mesh, name) -> bool:
+    if name is None:
+        return True
+    names = (name,) if isinstance(name, str) else tuple(name)
+    return all(n in mesh.axis_names for n in names)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Enables in-model ``constrain`` calls for the duration."""
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def constrain(x, spec):
+    """``with_sharding_constraint`` when a mesh is active and the dims divide
+    evenly; identity otherwise (keeps single-device tests unannotated)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    parts = []
+    for dim, name in enumerate(spec):
+        if name is None or not _axis_in_mesh(mesh, name):
+            parts.append(None)
+            continue
+        names = (name,) if isinstance(name, str) else tuple(name)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        parts.append(name if x.shape[dim] % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+# ------------------------------------------------------------------ param rules
+
+def _divides(n, k):
+    return k > 0 and n % k == 0
+
+
+def param_spec(path: str, shape, mesh_shape) -> P:
+    """Default tensor-parallel placement for a base-model parameter.
+
+    ``path`` is the flattened pytree key path (``/``-joined).  ``mesh_shape``
+    maps axis name -> size.  Client/pod axes never appear on base params.
+    """
+    m = mesh_shape.get("model", 1)
+
+    def mdl(dim_size):
+        return "model" if _divides(dim_size, m) else None
+
+    leaf = path.split("/")[-1]
+    if leaf in ("embed", "lm_head", "patch_proj"):
+        # (vocab, d) or (d, vocab): shard the big dim
+        big = 0 if shape[0] >= shape[-1] else len(shape) - 1
+        spec = [None] * len(shape)
+        spec[big] = mdl(shape[big])
+        return P(*spec)
+    if leaf in ("q", "k", "v", "w_gate", "w_up", "shared_gate", "shared_up",
+                "wx", "wy", "w_in"):
+        return P(None, mdl(shape[-1]))
+    if leaf in ("o", "w_down", "shared_down", "w_out"):
+        return P(mdl(shape[0]), None)
+    if leaf in ("w_gate_e", "w_up_e", "w_down_e"):
+        return P(mdl(shape[0]), None, None)
+    if len(shape) == 3 and leaf in ("w_gate", "w_up", "w_down"):
+        # stacked experts (E, ., .)
+        return P(mdl(shape[0]), None, None)
+    return P(*([None] * len(shape)))
+
+
+def stacked(spec: P, extra=None) -> P:
+    """Prepend a leading (layer-stack or client) dim to a spec."""
+    return P(extra, *spec)

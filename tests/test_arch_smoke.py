@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers, d_model<=512, <=4 experts) runs one forward + one federated LoRA
+train step on CPU; asserts output shapes and no NaNs.  Full configs are
+exercised compile-only by the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, supports_shape
+from repro.configs.base import (FederatedConfig, LoRAConfig, OptimizerConfig)
+from repro.core.federated import FederatedTrainer
+from repro.data.synthetic import FederatedDataset
+from repro.models.api import PATCH_EMBED_DIM, build_model
+
+SEQ = 32
+BATCH = 2
+
+
+def reduced_batch(cfg, batch=BATCH, seq=SEQ, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                        cfg.vocab_size)}
+    if cfg.family == "vlm":
+        out["tokens"] = out["tokens"][:, :seq - cfg.num_patches]
+        out["patches"] = jax.random.normal(
+            ks[1], (batch, cfg.num_patches, PATCH_EMBED_DIM), jnp.float32)
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_forward_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512 and cfg.num_layers <= 2
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = reduced_batch(cfg)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (BATCH, SEQ, model.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_federated_train_step(arch):
+    """One full federated round (2 clients x 2 local steps) with SFed-LoRA
+    scaling; loss finite, grads flow, A synchronized across clients."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    n = 2
+    ds = FederatedDataset(cfg.vocab_size, n, seq_len=SEQ,
+                          batch_per_client=BATCH)
+    tr = FederatedTrainer(
+        model, ds,
+        lora_cfg=LoRAConfig(rank=4, scaling="sfedlora",
+                            targets=cfg.lora_targets),
+        fed_cfg=FederatedConfig(num_clients=n, local_steps=2,
+                                aggregation="fedsa"),
+        opt_cfg=OptimizerConfig(name="sgd", lr=1e-2))
+    if cfg.family in ("vlm", "audio"):
+        # federated trainer's synthetic data is tokens-only; drive the round
+        # step directly with modality stubs
+        batch = reduced_batch(cfg)
+        batches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n, 2) + x.shape), batch)
+        lora, opt, m = tr.round_step(tr.base, tr.lora, tr.opt_state, batches,
+                                     jnp.asarray(0))
+    else:
+        m = tr.run_round()
+        lora = tr.lora
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["grad_norm"]) > 0
+    # FedSA invariant: A equal across clients post-round, B client-specific
+    def leaves_named(tree, name):
+        out = []
+        def walk(node):
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    if k == name and not isinstance(v, dict):
+                        out.append(v)
+                    else:
+                        walk(v)
+        walk(tree)
+        return out
+    for a in leaves_named(lora, "a"):
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(a[1]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ASSIGNED)
+                                  if supports_shape(a, "decode_32k")])
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    cache = model.init_cache(BATCH, SEQ)
+    tok = jnp.ones((BATCH, 1), jnp.int32)
+    logits, cache2 = model.decode_step(params, cache, tok,
+                                       jnp.zeros((BATCH,), jnp.int32))
+    assert logits.shape == (BATCH, 1, model.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)

@@ -1,0 +1,116 @@
+"""Dry-run machinery unit tests that need no multi-device compile: the
+collective-bytes HLO parser, shape policy, input specs, and sharding rules."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ASSIGNED, INPUT_SHAPES, LONG_CONTEXT_OK,
+                           config_for_shape, get_config, supports_shape)
+from repro.models.api import build_model
+
+# import the parser without triggering the XLA_FLAGS device split
+import importlib.util
+import os
+import sys
+
+_spec = importlib.util.spec_from_file_location(
+    "_dryrun_parse", os.path.join(os.path.dirname(__file__), "..", "src",
+                                  "repro", "launch", "dryrun.py"))
+
+
+def _load_parser():
+    # dryrun sets XLA_FLAGS at import; jax is already initialized in tests so
+    # the flag has no effect here — safe to import for the pure functions.
+    mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(mod)
+    return mod
+
+
+HLO = """
+  %ag = bf16[4,1024]{1,0} all-gather(%p), replica_groups={}
+  %ar = f32[512]{0} all-reduce(%q), to_apply=%sum
+  %aa = (bf16[2,8]{1,0}, bf16[2,8]{1,0}) all-to-all(%a, %b)
+  %cp = u32[16]{0} collective-permute(%c)
+  %ags = bf16[64]{0} all-gather-start(%p)
+  %dot = f32[4,4]{1,0} dot(%x, %y)
+"""
+
+
+def test_collective_bytes_parser():
+    mod = _load_parser()
+    out, counts = mod.collective_bytes(HLO)
+    assert out["all-gather"] == 4 * 1024 * 2 + 64 * 2      # incl. -start
+    assert counts["all-gather"] == 2
+    assert out["all-reduce"] == 512 * 4
+    assert out["all-to-all"] == 2 * (2 * 8 * 2)            # tuple result
+    assert out["collective-permute"] == 16 * 4
+    assert counts["reduce-scatter"] == 0
+
+
+def test_long_context_policy():
+    for arch in ASSIGNED:
+        ok = supports_shape(arch, "long_500k")
+        assert ok == (LONG_CONTEXT_OK[arch] is not None)
+    assert not supports_shape("roberta-large", "decode_32k")
+    assert supports_shape("roberta-large", "train_4k")
+
+
+def test_sliding_window_variant_selected():
+    cfg = config_for_shape("mistral-nemo-12b", "long_500k")
+    assert cfg.attn_window == 4096
+    cfg = config_for_shape("mistral-nemo-12b", "train_4k")
+    assert cfg.attn_window is None
+    # natively sub-quadratic archs keep their config
+    cfg = config_for_shape("recurrentgemma-9b", "long_500k")
+    assert cfg.block_pattern == ("rglru", "rglru", "attn")
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_input_specs_all_shapes(arch):
+    """input_specs produce consistent ShapeDtypeStructs for every shape
+    (no allocation — pure eval_shape)."""
+    for name, shape in INPUT_SHAPES.items():
+        if not supports_shape(arch, name):
+            continue
+        cfg = config_for_shape(arch, name)
+        model = build_model(cfg)
+        if shape.kind == "train":
+            spec = model.input_specs(shape, n_clients=16)
+            assert spec["tokens"].shape[0] == 16
+            assert spec["tokens"].shape[1] == shape.global_batch // 16
+        elif shape.kind == "prefill":
+            spec = model.input_specs(shape)
+            tok_s = spec["tokens"].shape[1]
+            if cfg.family == "vlm":
+                assert tok_s == shape.seq_len - cfg.num_patches
+            else:
+                assert tok_s == shape.seq_len
+        else:
+            spec = model.input_specs(shape)
+            assert spec["token"].shape == (shape.global_batch, 1)
+            assert "cache" in spec
+            # window archs cap the cache at the window size
+            leaves = jax.tree.leaves(spec["cache"])
+            assert leaves, arch
+
+
+def test_param_spec_rules():
+    from repro.sharding.rules import param_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    assert param_spec(("embed",), (131072, 5120), m) == P("model", None)
+    assert param_spec(("stack", "repeat", "p0", "attn", "q"),
+                      (40, 5120, 4096), m) == P(None, None, "model")
+    # kv dim not divisible -> replicated
+    assert param_spec(("stack", "repeat", "p0", "attn", "k"),
+                      (40, 5120, 8 * 128), m) == P(None, None, "model")
+    assert param_spec(("stack", "repeat", "p0", "moe", "w_gate"),
+                      (24, 64, 2048, 1408), m) == P(None, "model", None, None)
+    assert param_spec(("stack", "tail", "t0", "mlp", "w_down"),
+                      (14336, 5120), m) == P("model", None)
+    assert param_spec(("final_scale",), (5120,), m) == P(None)

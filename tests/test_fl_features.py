@@ -1,0 +1,78 @@
+"""Production-FL features: partial client participation and LR schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.core.aggregation import aggregate_clients
+from repro.core.federated import FederatedTrainer
+from repro.data.synthetic import FederatedDataset
+from repro.models.api import build_model
+from repro.optim.schedules import make_schedule, warmup_cosine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=64)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def test_partial_participation_trains_subset(tiny):
+    cfg, model, base = tiny
+    ds = FederatedDataset(64, 4, seq_len=32, batch_per_client=2)
+    tr = FederatedTrainer(
+        model, ds, lora_cfg=LoRAConfig(rank=4),
+        fed_cfg=FederatedConfig(num_clients=4, local_steps=2,
+                                participation=0.5),
+        opt_cfg=OptimizerConfig(name="sgd", lr=0.05), base_params=base)
+    for _ in range(5):
+        tr.run_round()
+    t = np.asarray(tr.opt_state["t"])
+    # 2 of 4 clients per round x 2 local steps x 5 rounds = 20 total steps
+    assert t.sum() == 20
+    assert t.max() < 10 * 2      # no client trained every round (w.h.p.)
+    # aggregated A still synchronized across ALL clients (incl. non-sampled)
+    a = np.asarray(tr.lora["stack"]["repeat"]["p0"]["attn"]["q"]["a"])
+    np.testing.assert_allclose(a[0], a[3], rtol=1e-5, atol=1e-7)
+
+
+def test_weighted_aggregation():
+    lora = {"x": {"q": {"a": jnp.arange(12.0).reshape(3, 2, 2),
+                        "b": jnp.ones((3, 2, 2))}}}
+    w = jnp.array([1.0, 0.0, 1.0])
+    out = aggregate_clients(lora, True, False, weights=w)
+    a = np.asarray(out["x"]["q"]["a"])
+    want = (np.arange(12.0).reshape(3, 2, 2)[[0, 2]]).mean(0)
+    np.testing.assert_allclose(a[1], want)
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(2.0, 10, 110, final_frac=0.1)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(2.0)
+    assert float(lr(110)) == pytest.approx(0.2, rel=1e-3)
+    # monotone decay after warmup
+    vals = [float(lr(t)) for t in range(10, 111, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_make_schedule_in_optimizer():
+    from repro.optim.optimizers import make_optimizer
+    cfg = OptimizerConfig(name="sgd", lr=1.0, lr_schedule="step",
+                          lr_schedule_kwargs={"decay": 0.5, "every": 2})
+    init, update = make_optimizer(cfg)
+    p = {"w": jnp.ones((4,))}
+    st = init(p)
+    g = {"w": jnp.ones((4,))}
+    deltas = []
+    for _ in range(4):
+        upd, st = update(g, st, p)
+        deltas.append(float(-upd["w"][0]))
+    assert deltas[0] == pytest.approx(1.0)       # t=1: no decay yet
+    assert deltas[1] == pytest.approx(0.5)       # t=2: one decay
+    assert deltas[3] == pytest.approx(0.25)      # t=4: two decays

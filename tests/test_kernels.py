@@ -1,0 +1,137 @@
+"""Pallas kernel validation: shape/dtype sweeps + assert_allclose against the
+ref.py pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ops import flash_mha, fused_lora_matmul, rglru_scan_op
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -------------------------------------------------------------- lora_matmul
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,r", [
+    (128, 256, 128, 4),
+    (256, 512, 512, 8),
+    (512, 512, 256, 64),
+    (256, 1024, 256, 128),
+    (128, 128, 128, 512),   # paper's extreme rank
+])
+def test_lora_matmul_sweep(m, k, n, r, dtype):
+    ks = jax.random.split(jax.random.key(m * 7 + r), 4)
+    x = _rand(ks[0], (m, k), dtype)
+    w = _rand(ks[1], (k, n), dtype, k ** -0.5)
+    a = _rand(ks[2], (r, k), dtype, 0.02)
+    b = _rand(ks[3], (n, r), dtype, 0.02)
+    gamma = 8.0 / np.sqrt(r)
+    out = lora_matmul(x, w, a, b, gamma, interpret=True)
+    want = ref.lora_matmul_ref(x, w, a, b, gamma)
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_lora_matmul_gamma_zero_is_base_matmul():
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = _rand(ks[0], (128, 256), jnp.float32)
+    w = _rand(ks[1], (256, 128), jnp.float32)
+    a = _rand(ks[2], (8, 256), jnp.float32)
+    b = _rand(ks[3], (128, 8), jnp.float32)
+    out = lora_matmul(x, w, a, b, 0.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w), rtol=2e-5,
+                               atol=2e-4)
+
+
+def test_fused_lora_matmul_batched_wrapper():
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = _rand(ks[0], (2, 4, 128, 256), jnp.float32)
+    w = _rand(ks[1], (256, 128), jnp.float32)
+    a = _rand(ks[2], (16, 256), jnp.float32, 0.02)
+    b = _rand(ks[3], (128, 16), jnp.float32, 0.02)
+    out = fused_lora_matmul(x, w, a, b, 2.0)
+    want = ref.lora_matmul_ref(x.reshape(-1, 256), w, a, b, 2.0
+                               ).reshape(2, 4, 128, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------- flash_attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,t,d,causal,window", [
+    (256, 256, 64, True, None),
+    (256, 256, 128, False, None),
+    (512, 512, 64, True, 128),    # sliding window
+    (128, 512, 64, False, None),  # cross-attention shape
+])
+def test_flash_attention_sweep(s, t, d, causal, window, dtype):
+    bh = 4
+    ks = jax.random.split(jax.random.key(s + d), 3)
+    q = _rand(ks[0], (bh, s, d), dtype)
+    k = _rand(ks[1], (bh, t, d), dtype)
+    v = _rand(ks[2], (bh, t, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=128,
+                          bk=128, interpret=True)
+    want = ref.flash_attention_ref(q[:, :, None], k[:, :, None],
+                                   v[:, :, None], causal=causal,
+                                   window=window)[:, :, 0]
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+def test_flash_mha_gqa_expansion():
+    b, s, h, kh, d = 2, 256, 8, 2, 64
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = _rand(ks[0], (b, s, h, d), jnp.float32)
+    k = _rand(ks[1], (b, s, kh, d), jnp.float32)
+    v = _rand(ks[2], (b, s, kh, d), jnp.float32)
+    out = flash_mha(q, k, v, causal=True)
+    kx = jnp.repeat(k, h // kh, axis=2)
+    vx = jnp.repeat(v, h // kh, axis=2)
+    want = ref.flash_attention_ref(q, kx, vx, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5,
+                               atol=1e-4)
+
+
+# -------------------------------------------------------------- rglru_scan
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bt,s,d,bs", [
+    (2, 64, 32, 16),
+    (4, 128, 128, 128),
+    (1, 256, 64, 64),
+])
+def test_rglru_scan_sweep(bt, s, d, bs, dtype):
+    ks = jax.random.split(jax.random.key(s * 3 + d), 2)
+    a = jax.random.uniform(ks[0], (bt, s, d), jnp.float32, 0.5,
+                           0.999).astype(dtype)
+    b = _rand(ks[1], (bt, s, d), dtype, 0.5)
+    out = rglru_scan_pallas(a, b, block_seq=bs, interpret=True)
+    want = ref.rglru_scan_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 5)
+
+
+def test_rglru_matches_model_associative_scan():
+    """The Pallas kernel and the model's associative_scan agree."""
+    from repro.models.rglru import rglru_scan
+    ks = jax.random.split(jax.random.key(5), 2)
+    a = jax.random.uniform(ks[0], (2, 64, 32), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (2, 64, 32), jnp.float32)
+    np.testing.assert_allclose(np.asarray(rglru_scan_op(a, b)),
+                               np.asarray(rglru_scan(a, b)), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,113 @@
+"""LoRA tree construction, merging, and aggregation-strategy semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import LoRAConfig, ModelConfig
+from repro.core.aggregation import (aggregate_clients, mask_grads,
+                                    strategy_flags, upload_bytes)
+from repro.core.lora import init_lora, merge_lora, num_lora_params, split_ab
+from repro.models.api import build_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="t", family="dense", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_lora_targets_qv_only(tiny):
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    attn = lora["stack"]["repeat"]["p0"]["attn"]
+    assert set(attn) == {"q", "v"}
+    assert attn["q"]["a"].shape == (3, 4, 64)       # stacked over layers
+    assert attn["v"]["b"].shape == (3, 32, 4)       # kv_dim = 2*16
+    assert float(jnp.abs(attn["q"]["b"]).max()) == 0.0   # B init zero
+
+
+def test_lora_targets_extended(tiny):
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1),
+                     LoRAConfig(rank=4, targets=("q", "k", "v", "o")))
+    assert set(lora["stack"]["repeat"]["p0"]["attn"]) == {"q", "k", "v", "o"}
+
+
+def test_merge_lora_equals_runtime_adapter(tiny):
+    """W0 + gamma*BA merged == forward with runtime adapters (zero-latency
+    deployment claim)."""
+    cfg, model, params = tiny
+    lcfg = LoRAConfig(rank=4)
+    lora = init_lora(params, jax.random.key(1), lcfg)
+    # make B nonzero so the test is nontrivial
+    lora = jax.tree.map(
+        lambda x: x + 0.01 * jax.random.normal(jax.random.key(2), x.shape),
+        lora)
+    gamma = 1.7
+    toks = jax.random.randint(jax.random.key(3), (2, 16), 0, 128)
+    with_adapter, _ = model.forward(params, {"tokens": toks}, lora=lora,
+                                    gamma=gamma)
+    merged = merge_lora(params, lora, gamma)
+    with_merged, _ = model.forward(merged, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(with_adapter),
+                               np.asarray(with_merged), rtol=1e-4, atol=1e-4)
+
+
+def test_split_ab(tiny):
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    a, b = split_ab(lora)
+    assert num_lora_params(a) + num_lora_params(b) == num_lora_params(lora)
+
+
+@pytest.mark.parametrize("strategy,agg_a,agg_b", [
+    ("fedit", True, True), ("ffa", False, True),
+    ("fedsa", True, False)])
+def test_aggregation_selective(tiny, strategy, agg_a, agg_b):
+    cfg, model, params = tiny
+    lora1 = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    n = 3
+    lora = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.key(5), (n,) + x.shape), lora1)
+    (_, _), (fa, fb) = strategy_flags(strategy, 0)
+    assert (bool(fa), bool(fb)) == (agg_a, agg_b)
+    out = aggregate_clients(lora, fa, fb)
+    q = out["stack"]["repeat"]["p0"]["attn"]["q"]
+    a_equal = bool(jnp.allclose(q["a"][0], q["a"][1]))
+    b_equal = bool(jnp.allclose(q["b"][0], q["b"][1]))
+    assert a_equal == agg_a and b_equal == agg_b
+
+
+def test_rolora_alternates(tiny):
+    (ta0, tb0), (aa0, ab0) = strategy_flags("rolora", 0)
+    (ta1, tb1), (aa1, ab1) = strategy_flags("rolora", 1)
+    assert (ta0, tb0) == (True, False) and (ta1, tb1) == (False, True)
+
+
+def test_mask_grads_freezes(tiny):
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    ones = jax.tree.map(jnp.ones_like, lora)
+    masked = mask_grads(ones, True, False)
+    q = masked["stack"]["repeat"]["p0"]["attn"]["q"]
+    assert float(q["a"].min()) == 1.0 and float(jnp.abs(q["b"]).max()) == 0.0
+
+
+def test_upload_bytes_fedsa_half_of_fedit():
+    cfg = get_config("llama2-7b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    lora = init_lora(zeros, jax.random.key(1), LoRAConfig(rank=8))
+    lora_n = jax.tree.map(lambda x: x[None], lora)
+    fedit = upload_bytes(lora_n, True, True)
+    fedsa = upload_bytes(lora_n, True, False)
+    assert fedsa < fedit
+    # q adapters: A (r,4096)+B(4096,r) symmetric; v same -> exactly half
+    assert fedsa * 2 == fedit

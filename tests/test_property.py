@@ -1,0 +1,119 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import aggregate_clients, strategy_flags
+from repro.core.scaling import predicted_moment_scale, scaling_factor
+from repro.kernels import ref
+from repro.kernels.lora_matmul import lora_matmul
+from repro.models.attention import make_mask
+from repro.optim.optimizers import (apply_updates, clip_by_global_norm,
+                                    global_norm, sgd)
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(r=st.integers(1, 4096), n=st.integers(1, 64),
+       alpha=st.floats(0.5, 64, allow_nan=False))
+@settings(**SET)
+def test_sfed_moment_invariant(r, n, alpha):
+    """gamma_z^2 * r / N == alpha^2 exactly, for all (N, r, alpha)."""
+    g = scaling_factor("sfedlora", alpha, r, n)
+    assert abs(predicted_moment_scale(g, r, n) - alpha ** 2) < 1e-6 * alpha**2
+
+
+@given(r=st.integers(1, 2048), n=st.integers(1, 64))
+@settings(**SET)
+def test_scaling_ordering(r, n):
+    """Paper App. B.3: za < sfedlora (for alpha>=1, N>=1) and zb >= sfedlora
+    for N >= alpha^(2/3)... we check the literal claims: za <= rslora <=
+    sfedlora at alpha=8 with N>=1, and zb > sfedlora for N >= 4."""
+    a = 8.0
+    za = scaling_factor("za", a, r, n)
+    rs = scaling_factor("rslora", a, r, n)
+    sf = scaling_factor("sfedlora", a, r, n)
+    zb = scaling_factor("zb", a, r, n)
+    assert za <= rs <= sf + 1e-12
+    if n >= 4:
+        assert zb >= sf
+
+
+@given(n=st.integers(2, 5), seed=st.integers(0, 100))
+@settings(**SET)
+def test_aggregation_idempotent_and_mean_preserving(n, seed):
+    """Aggregating twice == aggregating once; client mean preserved."""
+    key = jax.random.key(seed)
+    lora = {"x": {"attn": {"q": {
+        "a": jax.random.normal(key, (n, 4, 8)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 8, 4))}}}}
+    out = aggregate_clients(lora, True, False)
+    out2 = aggregate_clients(out, True, False)
+    a, a2 = out["x"]["attn"]["q"]["a"], out2["x"]["attn"]["q"]["a"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a.mean(0)),
+                               np.asarray(lora["x"]["attn"]["q"]["a"].mean(0)),
+                               rtol=1e-5, atol=1e-6)
+    # b untouched
+    np.testing.assert_array_equal(np.asarray(out["x"]["attn"]["q"]["b"]),
+                                  np.asarray(lora["x"]["attn"]["q"]["b"]))
+
+
+@given(s=st.integers(1, 33), t=st.integers(1, 33),
+       window=st.one_of(st.none(), st.integers(1, 40)))
+@settings(**SET)
+def test_mask_properties(s, t, window):
+    pq = jnp.arange(s)[None]
+    pk = jnp.arange(t)[None]
+    m = make_mask(pq, pk, causal=True, window=window)
+    m = np.asarray(m[0])
+    # diagonal always visible (self-attention never fully masked)
+    for i in range(min(s, t)):
+        assert m[i, i]
+    # strictly causal
+    assert not m[np.triu_indices_from(m, k=1)].any()
+    if window is not None:
+        ii, jj = np.nonzero(m)
+        assert ((ii - jj) < window).all()
+
+
+@given(m=st.sampled_from([64, 128]), k=st.sampled_from([64, 128]),
+       nn=st.sampled_from([64, 128]), r=st.sampled_from([2, 8, 16]),
+       gamma=st.floats(0, 8, allow_nan=False), seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_lora_matmul_kernel_property(m, k, nn, r, gamma, seed):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, nn)) * k ** -0.5
+    a = jax.random.normal(ks[2], (r, k)) * 0.05
+    b = jax.random.normal(ks[3], (nn, r)) * 0.05
+    out = lora_matmul(x, w, a, b, gamma, bm=64, bn=64, bk=64, interpret=True)
+    want = ref.lora_matmul_ref(x, w, a, b, gamma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+@given(seed=st.integers(0, 100), lr=st.floats(1e-4, 1e-1),
+       momentum=st.floats(0, 0.95))
+@settings(**SET)
+def test_sgd_descends_quadratic(seed, lr, momentum):
+    key = jax.random.key(seed)
+    x = {"p": jax.random.normal(key, (8,))}
+    init, update = sgd(lr, momentum)
+    st_ = init(x)
+    for _ in range(5):
+        g = jax.tree.map(lambda v: 2 * v, x)     # d/dx ||x||^2
+        upd, st_ = update(g, st_, x)
+        x2 = apply_updates(x, upd)
+        x = x2
+    assert float(global_norm(x)) <= float(
+        global_norm({"p": jax.random.normal(key, (8,))})) + 1e-6
+
+
+@given(seed=st.integers(0, 100), max_norm=st.floats(0.01, 10))
+@settings(**SET)
+def test_clip_by_global_norm(seed, max_norm):
+    g = {"a": jax.random.normal(jax.random.key(seed), (16,)) * 10}
+    clipped = clip_by_global_norm(g, max_norm)
+    assert float(global_norm(clipped)) <= max_norm * 1.001

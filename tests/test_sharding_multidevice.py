@@ -1,0 +1,96 @@
+"""Multi-device sharding tests.  jax locks the device count at first init, so
+these run in subprocesses with --xla_force_host_platform_device_count and a
+small (2x2 / 2x2x2) mesh; numerics are compared against the 1-device run."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.core.federated import make_fed_round_step
+from repro.core.lora import init_lora
+from repro.core.scaling import scaling_factor
+from repro.models.api import build_model
+from repro.sharding import rules
+from repro.sharding.specs import use_mesh
+
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=256)
+model = build_model(cfg)
+n = 4
+gamma = scaling_factor("sfedlora", 8.0, 8, n)
+step = make_fed_round_step(model, strategy="fedsa",
+                           opt_cfg=OptimizerConfig(name="sgd", lr=0.05),
+                           gamma=gamma, jit=False)
+from repro.optim.optimizers import make_optimizer
+params = model.init(jax.random.key(0))
+lora1 = init_lora(params, jax.random.key(1), LoRAConfig(rank=8))
+lora = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), lora1)
+opt1 = make_optimizer(OptimizerConfig(name="sgd", lr=0.05))[0](lora1)
+opt = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), opt1)
+toks = jax.random.randint(jax.random.key(2), (n, 2, 2, 32), 0, 256)
+batch = {"tokens": toks}
+
+# ---- 1-device reference
+ref_lora, _, ref_m = jax.jit(step)(params, lora, opt, batch, jnp.asarray(0))
+ref_loss = float(ref_m["loss"])
+
+# ---- 4x2 mesh (data=clients, model=tp)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+in_shard = (rules.params_sharding(params, mesh),
+            rules.lora_sharding(lora, mesh),
+            rules.lora_sharding(opt, mesh),
+            rules.inputs_sharding(batch, mesh, client_dim=True),
+            jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+with use_mesh(mesh):
+    f = jax.jit(step, in_shardings=in_shard)
+    out_lora, _, m = f(params, lora, opt, batch, jnp.asarray(0))
+loss = float(m["loss"])
+
+# ---- 2x2x2 multi-pod style mesh
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+in_shard3 = (rules.params_sharding(params, mesh3),
+             rules.lora_sharding(lora, mesh3),
+             rules.lora_sharding(opt, mesh3),
+             rules.inputs_sharding(batch, mesh3, client_dim=True),
+             jax.NamedSharding(mesh3, jax.sharding.PartitionSpec()))
+with use_mesh(mesh3):
+    f3 = jax.jit(step, in_shardings=in_shard3)
+    _, _, m3 = f3(params, lora, opt, batch, jnp.asarray(0))
+loss3 = float(m3["loss"])
+
+# numerics agree across meshes
+ok_a = None
+qa = out_lora["stack"]["repeat"]["p0"]["attn"]["q"]["a"]
+ra = ref_lora["stack"]["repeat"]["p0"]["attn"]["q"]["a"]
+err = float(jnp.max(jnp.abs(qa - ra)))
+print(json.dumps({"ref_loss": ref_loss, "mesh_loss": loss,
+                  "mesh3_loss": loss3, "lora_err": err,
+                  "devices": len(jax.devices())}))
+"""
+
+
+@pytest.mark.slow
+def test_fed_round_step_sharded_matches_single_device(tmp_path):
+    script = tmp_path / "sharded.py"
+    script.write_text(SCRIPT)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 8
+    assert abs(rec["ref_loss"] - rec["mesh_loss"]) < 1e-3
+    assert abs(rec["ref_loss"] - rec["mesh3_loss"]) < 1e-3
+    assert rec["lora_err"] < 1e-4
