@@ -41,6 +41,24 @@ def main(emit=print):
     us = timeit(lambda *t: fused_lora_matmul(*t, 2.0), x, w, a, b)
     emit(f"kernels,lora_matmul_pallas_interp,{us:.1f},flops={flops}")
 
+    # lora_matmul backward: fused custom-VJP kernels vs jnp autodiff.
+    # dx mirrors the forward's three GEMMs (2mnk + 2mnr + 2mrk); dA and dB
+    # add one rank-r reduction each (2mrk and 2mnr) — dW is dead-code-
+    # eliminated: LoRA training never differentiates the base weights.
+    from repro.kernels.dispatch import fused_lora_apply
+    bwd_flops = 2 * m * n * k + 4 * m * n * r + 4 * m * r * k
+    ref_grad = jax.jit(jax.grad(
+        lambda x_, a_, b_: ref.lora_matmul_ref(x_, w, a_, b_, 2.0).sum(),
+        argnums=(0, 1, 2)))
+    us = timeit(ref_grad, x, a, b)
+    emit(f"kernels,lora_matmul_bwd_ref_jnp,{us:.1f},gflops={bwd_flops/us/1e3:.2f}")
+    fused_grad = jax.jit(jax.grad(
+        lambda x_, a_, b_: fused_lora_apply(x_, w, a_, b_, 2.0,
+                                            interpret=True).sum(),
+        argnums=(0, 1, 2)))
+    us = timeit(fused_grad, x, a, b)
+    emit(f"kernels,lora_matmul_bwd_pallas_interp,{us:.1f},flops={bwd_flops}")
+
     # flash attention: b=1, s=1024, h=4, d=64
     bq, s, h, d = 1, 1024, 4, 64
     q = jax.random.normal(ks[0], (bq, s, h, d), jnp.float32)

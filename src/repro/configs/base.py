@@ -67,6 +67,12 @@ class ModelConfig:
     dtype: str = "float32"        # activation dtype ("bfloat16" on the mesh)
     param_dtype: str = "float32"
 
+    # --- kernels ------------------------------------------------------------------
+    # Route LoRA-adapted projections through repro/kernels/dispatch.py: fused
+    # Pallas kernels (custom VJP) on TPU, interpreter tier when
+    # REPRO_KERNEL_INTERPRET is set, pure-jnp reference otherwise.
+    use_pallas: bool = False
+
     # --- LoRA defaults (paper: W_q, W_v) ------------------------------------------
     lora_targets: Tuple[str, ...] = ("q", "v")
 

@@ -83,8 +83,25 @@ def aggregate_clients(lora_stacked, agg_a, agg_b, *, axis: int = 0,
     return _map_ab(lora_stacked, agg(agg_a), agg(agg_b))
 
 
+def _concrete_flag(flag, name: str) -> bool:
+    if isinstance(flag, jax.core.Tracer):
+        raise TypeError(
+            f"upload_bytes is host-only: '{name}' is a traced value (e.g. "
+            "rolora flags derived from a traced round_idx inside jit). "
+            "Evaluate strategy_flags with a concrete round_idx on the host "
+            "before calling upload_bytes.")
+    return bool(flag)
+
+
 def upload_bytes(lora_stacked, agg_a, agg_b) -> int:
-    """Per-round client->server communication volume (for the comm table)."""
+    """Per-round client->server communication volume (for the comm table).
+
+    Host-only accounting: ``agg_a``/``agg_b`` must be concrete bools/ints
+    (0/1).  The rolora strategy's flags are traced inside the jitted round
+    step — recompute them with a concrete round index for reporting.
+    """
+    agg_a = _concrete_flag(agg_a, "agg_a")
+    agg_b = _concrete_flag(agg_b, "agg_b")
     total = 0
     def count(flag):
         def f(x):
@@ -93,5 +110,5 @@ def upload_bytes(lora_stacked, agg_a, agg_b) -> int:
                 total += x[0].size * x.dtype.itemsize
             return x
         return f
-    _map_ab(lora_stacked, count(bool(agg_a)), count(bool(agg_b)))
+    _map_ab(lora_stacked, count(agg_a), count(agg_b))
     return total

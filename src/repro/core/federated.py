@@ -111,6 +111,10 @@ class FederatedTrainer:
             gamma=self.gamma, donate=False)
         self.round_idx = 0
         self.history = []
+        # cached so repeated evals reuse one compilation (gamma is static:
+        # the fused kernel tier bakes it into the Pallas kernels at trace
+        # time, so it cannot be a traced argument)
+        self._eval_loss = jax.jit(model.loss, static_argnames=("gamma",))
         import numpy as _np
         self._rng = _np.random.default_rng(seed + 31337)
 
@@ -145,6 +149,6 @@ class FederatedTrainer:
         """Held-out perplexity using client ``client``'s personalized model."""
         toks = jnp.asarray(self.dataset.eval_batch(batch))
         lora_i = jax.tree.map(lambda x: x[client], self.lora)
-        loss, _ = jax.jit(self.model.loss, static_argnames=())(
-            self.base, {"tokens": toks}, lora=lora_i, gamma=self.gamma)
+        loss, _ = self._eval_loss(self.base, {"tokens": toks}, lora=lora_i,
+                                  gamma=self.gamma)
         return float(jnp.exp(loss))

@@ -76,12 +76,6 @@ def lora_tree_for_model(model, key, lora_cfg):
 def merge_lora(params, lora, gamma):
     """W0 + gamma * B A merged into the base weights (inference-time,
     zero-latency deployment — the paper's 'no inference cost' property)."""
-    def walk(p, l):
-        if isinstance(p, dict):
-            return {k: walk(v, l.get(k)) if isinstance(l, dict) and k in l
-                    else v for k, v in p.items()}
-        return p
-
     def merge_node(p_node, l_node):
         if not (isinstance(l_node, dict)):
             return p_node
@@ -103,13 +97,13 @@ def num_lora_params(lora) -> int:
 
 def split_ab(lora):
     """Split a LoRA tree into (A-only tree, B-only tree) with the same
-    structure — used by the selective-aggregation strategies."""
-    a = jax.tree.map(lambda x: x, lora)
-
+    structure — used by the selective-aggregation strategies.  Nodes holding
+    only one of the two matrices (e.g. the output of a previous split) yield
+    an empty dict on the missing side."""
     def pick(node, which):
         if isinstance(node, dict):
-            if set(node) == {"a", "b"}:
-                return {which: node[which]}
+            if node and set(node) <= {"a", "b"}:
+                return {which: node[which]} if which in node else {}
             return {k: pick(v, which) for k, v in node.items()}
         return node
 

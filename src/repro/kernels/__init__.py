@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the paper's compute hot-spots, plus the dispatch layer
+# (repro/kernels/dispatch.py) that routes the model stack's LoRA projections
+# to compiled-Mosaic / interpreter / pure-jnp tiers per backend and per the
+# model config's `use_pallas` flag.  ref.py holds the correctness oracles.

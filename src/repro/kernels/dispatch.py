@@ -1,0 +1,183 @@
+"""Kernel dispatch: route LoRA-adapted projections to the right kernel tier.
+
+This is the bridge between the model stack and ``repro/kernels``: every
+``linear`` in the models delegates here, and this module decides — per
+backend and per the model config's ``use_pallas`` flag — which implementation
+serves the projection:
+
+  reference   pure-jnp XLA ops (always available, differentiable natively) —
+              the default, and the only tier when ``use_pallas`` is off
+  interpret   the Pallas kernels under the Pallas interpreter (numerically
+              the exact kernel path, but Python-speed — CPU/GPU debugging
+              and the parity tests)
+  pallas      compiled Mosaic kernels on a real TPU (the production hot path)
+
+Selection, in order:
+  1. ``use_pallas=False`` (the config default)        -> reference
+  2. ``force_mode(...)`` / ``REPRO_KERNEL_MODE`` env  -> that tier
+  3. backend is TPU                                   -> pallas
+  4. ``REPRO_KERNEL_INTERPRET`` env is truthy         -> interpret
+  5. otherwise                                        -> reference
+     (interpret-mode Pallas is emulation — far too slow to be a silent
+     CPU default for training loops)
+
+The fused tiers run :func:`repro.kernels.lora_matmul.lora_matmul_vjp`, a
+``jax.custom_vjp`` whose backward pass is also fused Pallas kernels, so jitted
+training (``core/federated.py`` round steps) hits the fused path in both the
+forward and backward directions.  Non-block-divisible shapes are zero-padded
+up to block multiples here (padding/slicing is plain jnp, so autodiff routes
+cotangents through it for free) and the rank dim is padded to the fp32
+sublane multiple.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_matmul import lora_matmul_vjp
+
+MODES = ("reference", "interpret", "pallas")
+
+# MXU-aligned kernel block defaults (see lora_matmul.py) and fp32 tiling
+BM, BN, BK = 256, 256, 512
+_SUBLANE, _LANE = 8, 128
+
+# contextvars so concurrent traces (e.g. an eval thread tracing a reference
+# model while a trainer thread traces a fused one) can't cross-contaminate
+_use_pallas = contextvars.ContextVar("repro_use_pallas", default=False)
+_forced = contextvars.ContextVar("repro_forced_mode", default=None)
+
+# trace-time instrumentation: how many projections lowered to each tier
+# (tests assert the model forward provably routes through the fused path).
+# Deliberately a plain process-global: it counts trace-time lowerings for
+# single-threaded tests/debugging only — cached jit calls don't re-count,
+# and concurrent traces share it.  Routing correctness itself is isolated
+# via the contextvars above.
+stats = {"fused": 0, "reference": 0}
+
+
+def reset_stats() -> None:
+    stats["fused"] = 0
+    stats["reference"] = 0
+
+
+def force_mode(mode) -> None:
+    """Pin the fused tier (``None`` restores backend-based selection).  Only
+    consulted when ``use_pallas`` is active — a forced tier never drags a
+    ``use_pallas=False`` model off the reference path."""
+    if mode is not None and mode not in MODES:
+        raise ValueError(f"unknown kernel mode '{mode}'; options {MODES}")
+    _forced.set(mode)
+
+
+def resolve_mode() -> str:
+    if not _use_pallas.get():
+        return "reference"
+    forced = _forced.get() or os.environ.get("REPRO_KERNEL_MODE")
+    if forced:
+        if forced not in MODES:
+            raise ValueError(
+                f"REPRO_KERNEL_MODE='{forced}' invalid; options {MODES}")
+        return forced
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    env = os.environ.get("REPRO_KERNEL_INTERPRET", "")
+    if env.lower() in ("1", "true", "yes", "on"):
+        return "interpret"
+    return "reference"
+
+
+@contextlib.contextmanager
+def scope(use_pallas: bool):
+    """Trace-time context set by the model API: every ``linear`` underneath
+    dispatches per the active model's ``cfg.use_pallas``."""
+    token = _use_pallas.set(bool(use_pallas))
+    try:
+        yield
+    finally:
+        _use_pallas.reset(token)
+
+
+# ------------------------------------------------------------------ padding
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _block(dim: int, default: int, align: int) -> int:
+    return min(default, _round_up(dim, align))
+
+
+def _pad2(arr, rows: int, cols: int):
+    pr, pc = rows - arr.shape[0], cols - arr.shape[1]
+    if pr or pc:
+        arr = jnp.pad(arr, ((0, pr), (0, pc)))
+    return arr
+
+
+def fused_lora_apply(x2, w, a, b, gamma, *, interpret: bool):
+    """Run the fused custom-VJP kernel on arbitrary (m, k, n, r): pick
+    aligned block sizes, zero-pad every dim to a block multiple, slice the
+    result back.  Zero rows/cols contribute nothing to any of the GEMMs, so
+    padding is exact (fwd and bwd)."""
+    m, kdim = x2.shape
+    n = w.shape[1]
+    r = a.shape[0]
+    if 0 in (m, kdim, n, r):
+        # nothing to fuse on empty operands; the reference expression gives
+        # the correctly-shaped (possibly empty) result on every tier
+        return x2 @ w + gamma * ((x2 @ a.T) @ b.T)
+    bm = _block(m, BM, _SUBLANE)
+    bn = _block(n, BN, _LANE)
+    bk = _block(kdim, BK, _LANE)
+    mp, kp, np_ = _round_up(m, bm), _round_up(kdim, bk), _round_up(n, bn)
+    rp = _round_up(r, _SUBLANE)
+    y = lora_matmul_vjp(_pad2(x2, mp, kp), _pad2(w, kp, np_),
+                        _pad2(a, rp, kp), _pad2(b, np_, rp), gamma,
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if mp != m or np_ != n:
+        y = y[:m, :n]
+    return y
+
+
+# ----------------------------------------------------------------- dispatch
+
+def lora_linear(x, w, lora=None, gamma: float = 0.0):
+    """y = x W (+ gamma * (x A^T) B^T) through the active kernel tier.
+
+    ``lora`` is ``{"a": (r, d_in), "b": (d_out, r)}`` or None; ``x`` may have
+    any number of leading dims.  Base-only projections (``lora=None``) are a
+    single XLA GEMM on every tier.
+    """
+    mode = resolve_mode()
+    if (lora is None or mode == "reference"
+            or 0 in (*x.shape, w.shape[1], lora["a"].shape[0])):
+        # empty operands take the reference expression on every tier —
+        # there is nothing to fuse and the kernel blocks would be 0-sized
+        stats["reference"] += 1
+        y = x @ w
+        if lora is not None:
+            y = y + gamma * ((x @ lora["a"].T) @ lora["b"].T)
+        return y
+    if isinstance(gamma, jax.core.Tracer):
+        raise TypeError(
+            "the fused kernel tier needs a static (python float) gamma — it "
+            "is baked into the Pallas kernels at trace time.  Pass gamma as "
+            "a static argument (jit static_argnames) or via closure, as "
+            "core/federated.py does.")
+    stats["fused"] += 1
+    lead = x.shape[:-1]
+    # match the reference tier's output dtype under mixed precision (e.g.
+    # bf16 activations x fp32 weights — or fp32 adapters on a bf16 base —
+    # promote to fp32 in the jnp expression): the kernel computes in fp32
+    # regardless and returns its x operand's dtype
+    out_dtype = jnp.result_type(x.dtype, w.dtype, lora["a"].dtype,
+                                lora["b"].dtype)
+    x2 = x.reshape(-1, x.shape[-1]).astype(out_dtype)
+    y = fused_lora_apply(x2, w, lora["a"], lora["b"], float(gamma),
+                         interpret=(mode == "interpret"))
+    return y.reshape(*lead, w.shape[1])

@@ -2,14 +2,32 @@
 
 The paper's hot-spot: every adapted projection pays two extra GEMMs.  A naive
 implementation round-trips the rank-r intermediate p = x A^T through HBM and
-re-reads x.  This kernel keeps p in VMEM scratch and fuses all three GEMMs in
-one pass over x:
+re-reads x.  This kernel keeps p in VMEM and fuses all three GEMMs in one pass
+over x:
 
   grid (nm, nn, nk), k innermost.  For each m-row of blocks:
     - during the n==0 sweep, p[m] += x[m,k] @ A^T[k]   (accumulated over k)
     - every (n, k) step accumulates out[m,n] += x[m,k] @ W[k,n]
     - at k == nk-1, out[m,n] += gamma * p[m] @ B^T[n]  (p complete by then,
       because the n==0 sweep finishes its k loop before n==1 starts)
+
+On differentiated forwards, p is written out as a second output (its
+revisited block acts as the accumulator) so the backward pass can reuse it as
+a residual instead of recomputing x @ A^T; non-differentiated calls use a
+VMEM-scratch variant that never spills p to HBM.
+
+The backward pass is fused the same way (``lora_matmul_vjp`` wires it up as a
+``jax.custom_vjp``).  Given the output cotangent g (m, n):
+
+  dx = g @ W^T + gamma * (g @ B) @ A     one fused kernel, structurally the
+                                         mirror of the forward (contraction
+                                         over n, rank-r intermediate q = g B
+                                         kept in VMEM and emitted as residual)
+  dA = gamma * q^T @ x                   rank-r reduction over m-blocks
+  dB = gamma * g^T @ p                   rank-r reduction over m-blocks
+  dW = x^T @ g                           plain XLA GEMM — dead-code-eliminated
+                                         whenever the base weights are frozen
+                                         (always, in LoRA fine-tuning)
 
 Block sizes default to MXU-aligned 256x256x512; the rank dim r stays whole in
 VMEM (r <= 512 per the paper's sweeps).  VMEM working set:
@@ -25,13 +43,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, w_ref, a_ref, b_ref, out_ref, p_scratch, *, gamma, nk):
+# ------------------------------------------------------------------ forward
+#
+# One kernel body serves two call variants: pallas_call passes scratch refs
+# after output refs, so p_ref is either a VMEM scratch buffer (inference,
+# decode, non-differentiated calls — p never touches HBM) or a revisited
+# (m, r) output block (the custom-VJP fwd rule, which reuses p as a residual
+# instead of recomputing x @ A^T in the backward).
+
+def _fwd_kernel(x_ref, w_ref, a_ref, b_ref, out_ref, p_ref, *, gamma, nk):
     n = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when((n == 0) & (k == 0))
     def _init_p():
-        p_scratch[...] = jnp.zeros_like(p_scratch)
+        p_ref[...] = jnp.zeros_like(p_ref)
 
     @pl.when(k == 0)
     def _init_out():
@@ -41,28 +67,31 @@ def _kernel(x_ref, w_ref, a_ref, b_ref, out_ref, p_scratch, *, gamma, nk):
 
     @pl.when(n == 0)
     def _acc_p():   # p[m] += x[m,k] @ A^T[k]   (A block is (r, bk))
-        p_scratch[...] += xb @ a_ref[...].astype(jnp.float32).T
+        p_ref[...] += xb @ a_ref[...].astype(jnp.float32).T
 
     out_ref[...] += xb @ w_ref[...].astype(jnp.float32)
 
     @pl.when(k == nk - 1)
     def _apply_lora():   # out[m,n] += gamma * p[m] @ B^T[n]  (B block (bn, r))
-        out_ref[...] += gamma * (p_scratch[...] @
+        out_ref[...] += gamma * (p_ref[...] @
                                  b_ref[...].astype(jnp.float32).T)
 
 
-def lora_matmul(x, w, a, b, gamma, *, bm=256, bn=256, bk=512,
-                interpret=False):
-    """x (m, k), w (k, n), a (r, k), b (n, r) -> (m, n) in x.dtype."""
+def _clamp_blocks(m, n, kdim, bm, bn, bk):
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+    return bm, bn, bk
+
+
+def _fwd_call_scratch(x, w, a, b, gamma, *, bm, bn, bk, interpret):
+    """Forward with p in VMEM scratch; returns y (m, n) fp32 only."""
     m, kdim = x.shape
     n = w.shape[1]
     r = a.shape[0]
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+    bm, bn, bk = _clamp_blocks(m, n, kdim, bm, bn, bk)
     nm, nn, nk = m // bm, n // bn, kdim // bk
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, gamma=gamma, nk=nk),
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, gamma=gamma, nk=nk),
         grid=(nm, nn, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),    # x
@@ -75,4 +104,196 @@ def lora_matmul(x, w, a, b, gamma, *, bm=256, bn=256, bk=512,
         scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
         interpret=interpret,
     )(x, w, a, b)
+
+
+def _fwd_call(x, w, a, b, gamma, *, bm, bn, bk, interpret):
+    """Runs the residual-emitting forward kernel; returns
+    (y (m,n) fp32, p (m,r) fp32)."""
+    m, kdim = x.shape
+    n = w.shape[1]
+    r = a.shape[0]
+    bm, bn, bk = _clamp_blocks(m, n, kdim, bm, bn, bk)
+    nm, nn, nk = m // bm, n // bn, kdim // bk
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, gamma=gamma, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),    # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),    # w
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),     # a
+            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),     # b
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),    # y
+            pl.BlockSpec((bm, r), lambda i, j, k: (i, 0)),     # p (residual)
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32),
+                   jax.ShapeDtypeStruct((m, r), jnp.float32)],
+        interpret=interpret,
+    )(x, w, a, b)
+
+
+def lora_matmul(x, w, a, b, gamma, *, bm=256, bn=256, bk=512,
+                interpret=False):
+    """x (m, k), w (k, n), a (r, k), b (n, r) -> (m, n) in x.dtype."""
+    out = _fwd_call_scratch(x, w, a, b, gamma, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
     return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- backward
+
+def _bwd_dx_kernel(g_ref, w_ref, a_ref, b_ref, dx_ref, q_ref, *, gamma, nt):
+    """dx = g @ W^T + gamma * (g @ B) @ A, contraction over the n dim (t);
+    q = g @ B accumulates in the revisited q output block (the bwd mirror of
+    the forward's p)."""
+    j = pl.program_id(1)   # k-block of dx
+    t = pl.program_id(2)   # n-block (contraction)
+
+    @pl.when((j == 0) & (t == 0))
+    def _init_q():
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    @pl.when(t == 0)
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    gb = g_ref[...].astype(jnp.float32)
+
+    @pl.when(j == 0)
+    def _acc_q():   # q[m] += g[m,t] @ B[t]   (B block is (bn, r))
+        q_ref[...] += gb @ b_ref[...].astype(jnp.float32)
+
+    dx_ref[...] += gb @ w_ref[...].astype(jnp.float32).T
+
+    @pl.when(t == nt - 1)
+    def _apply_lora():   # dx[m,j] += gamma * q[m] @ A[:,j]  (A block (r, bk))
+        dx_ref[...] += gamma * (q_ref[...] @ a_ref[...].astype(jnp.float32))
+
+
+def _bwd_dx_call(g, w, a, b, gamma, *, bm, bn, bk, interpret):
+    """Returns (dx (m,k) fp32, q = g @ B (m,r) fp32)."""
+    m, n = g.shape
+    kdim = w.shape[0]
+    r = a.shape[0]
+    bm, bn, bk = _clamp_blocks(m, n, kdim, bm, bn, bk)
+    nm, nkb, nt = m // bm, kdim // bk, n // bn
+    return pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, gamma=gamma, nt=nt),
+        grid=(nm, nkb, nt),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, t)),    # g
+            pl.BlockSpec((bk, bn), lambda i, j, t: (j, t)),    # w
+            pl.BlockSpec((r, bk), lambda i, j, t: (0, j)),     # a
+            pl.BlockSpec((bn, r), lambda i, j, t: (t, 0)),     # b
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, j)),    # dx
+            pl.BlockSpec((bm, r), lambda i, j, t: (i, 0)),     # q (residual)
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+                   jax.ShapeDtypeStruct((m, r), jnp.float32)],
+        interpret=interpret,
+    )(g, w, a, b)
+
+
+def _bwd_da_kernel(q_ref, x_ref, da_ref, *, gamma):
+    """dA[:, j] += gamma * q[i]^T @ x[i, j], reduced over m-blocks (i)."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = jnp.zeros_like(da_ref)
+
+    da_ref[...] += gamma * (q_ref[...].T @ x_ref[...].astype(jnp.float32))
+
+
+def _bwd_da_call(q, x, gamma, *, bm, bk, interpret):
+    m, r = q.shape
+    kdim = x.shape[1]
+    bm, bk = min(bm, m), min(bk, kdim)
+    nm, nkb = m // bm, kdim // bk
+    return pl.pallas_call(
+        functools.partial(_bwd_da_kernel, gamma=gamma),
+        grid=(nkb, nm),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),        # q
+            pl.BlockSpec((bm, bk), lambda j, i: (i, j)),       # x
+        ],
+        out_specs=pl.BlockSpec((r, bk), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, kdim), jnp.float32),
+        interpret=interpret,
+    )(q, x)
+
+
+def _bwd_db_kernel(g_ref, p_ref, db_ref, *, gamma):
+    """dB[j] += gamma * g[i, j]^T @ p[i], reduced over m-blocks (i)."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    db_ref[...] += gamma * (g_ref[...].astype(jnp.float32).T @ p_ref[...])
+
+
+def _bwd_db_call(g, p, gamma, *, bm, bn, interpret):
+    m, n = g.shape
+    r = p.shape[1]
+    bm, bn = min(bm, m), min(bn, n)
+    nm, nn = m // bm, n // bn
+    return pl.pallas_call(
+        functools.partial(_bwd_db_kernel, gamma=gamma),
+        grid=(nn, nm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),       # g
+            pl.BlockSpec((bm, r), lambda j, i: (i, 0)),        # p
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), jnp.float32),
+        interpret=interpret,
+    )(g, p)
+
+
+# --------------------------------------------------------------- custom VJP
+
+# gamma is baked into the kernels at trace time (a static closure value), so
+# each distinct (gamma, blocks, interpret) combination is its own op; the
+# cache is bounded so scaling-factor sweeps can't accumulate ops forever.
+@functools.lru_cache(maxsize=64)
+def _vjp_op(gamma, bm, bn, bk, interpret):
+    kw = dict(bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+    @jax.custom_vjp
+    def op(x, w, a, b):
+        # primal-only evaluation (no grad): scratch variant, no p in HBM
+        y = _fwd_call_scratch(x, w, a, b, gamma, **kw)
+        return y.astype(x.dtype)
+
+    def fwd(x, w, a, b):
+        y, p = _fwd_call(x, w, a, b, gamma, **kw)
+        return y.astype(x.dtype), (x, w, a, b, p)
+
+    def bwd(res, g):
+        x, w, a, b, p = res
+        dx, q = _bwd_dx_call(g, w, a, b, gamma, **kw)
+        da = _bwd_da_call(q, x, gamma, bm=bm, bk=bk, interpret=interpret)
+        db = _bwd_db_call(g, p, gamma, bm=bm, bn=bn, interpret=interpret)
+        dw = x.astype(jnp.float32).T @ g.astype(jnp.float32)
+        return (dx.astype(x.dtype), dw.astype(w.dtype),
+                da.astype(a.dtype), db.astype(b.dtype))
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def lora_matmul_vjp(x, w, a, b, gamma, *, bm=256, bn=256, bk=512,
+                    interpret=False):
+    """Differentiable fused LoRA matmul (``jax.custom_vjp`` with fused Pallas
+    backward kernels).  Same contract as :func:`lora_matmul`; ``gamma`` and
+    the block sizes must be static (python) values — the model stack's gamma
+    is a host-side float, so this holds on the training path."""
+    m, kdim = x.shape
+    n = w.shape[1]
+    bm, bn, bk = _clamp_blocks(m, n, kdim, bm, bn, bk)
+    return _vjp_op(float(gamma), bm, bn, bk, bool(interpret))(x, w, a, b)

@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.layers import norm_params, apply_norm
 from repro.models.transformer import (apply_stack, decode_stack, init_stack,
                                       init_stack_cache)
@@ -70,17 +71,20 @@ class Model:
     def forward(self, params, batch, lora=None, gamma: float = 0.0):
         """Full-sequence forward.  Returns (logits, aux_loss)."""
         cfg = self.cfg
-        x = self._embed(params, batch)
-        b, s, _ = x.shape
-        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-        enc_out = self._encode(params, batch) if cfg.family == "audio" else None
-        x, aux = apply_stack(cfg, params["stack"], x,
-                             lora=(lora or {}).get("stack"), gamma=gamma,
-                             positions=positions, enc_out=enc_out,
-                             causal=cfg.family != "encoder")
-        x = apply_norm(cfg, x, params, "final")
-        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        logits = x @ head.astype(x.dtype)
+        with dispatch.scope(cfg.use_pallas):
+            x = self._embed(params, batch)
+            b, s, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            enc_out = (self._encode(params, batch)
+                       if cfg.family == "audio" else None)
+            x, aux = apply_stack(cfg, params["stack"], x,
+                                 lora=(lora or {}).get("stack"), gamma=gamma,
+                                 positions=positions, enc_out=enc_out,
+                                 causal=cfg.family != "encoder")
+            x = apply_norm(cfg, x, params, "final")
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = x @ head.astype(x.dtype)
         return logits, aux
 
     def loss(self, params, batch, lora=None, gamma: float = 0.0):
@@ -120,15 +124,17 @@ class Model:
         per chunk inside a scan (beyond-paper memory-term optimization)."""
         cfg = self.cfg
         tokens = batch["tokens"]
-        x = self._embed(params, batch)
-        b, s, _ = x.shape
-        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-        enc_out = self._encode(params, batch) if cfg.family == "audio" else None
-        x, aux = apply_stack(cfg, params["stack"], x,
-                             lora=(lora or {}).get("stack"), gamma=gamma,
-                             positions=positions, enc_out=enc_out,
-                             causal=cfg.family != "encoder")
-        x = apply_norm(cfg, x, params, "final")
+        with dispatch.scope(cfg.use_pallas):
+            x = self._embed(params, batch)
+            b, s, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            enc_out = (self._encode(params, batch)
+                       if cfg.family == "audio" else None)
+            x, aux = apply_stack(cfg, params["stack"], x,
+                                 lora=(lora or {}).get("stack"), gamma=gamma,
+                                 positions=positions, enc_out=enc_out,
+                                 causal=cfg.family != "encoder")
+            x = apply_norm(cfg, x, params, "final")
         head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
         s_text = tokens.shape[1]
         x = x[:, -s_text:][:, :-1]                    # predict positions
@@ -168,13 +174,17 @@ class Model:
         """One token: token (b,1) int32, pos (b,) absolute position.
         Returns (logits (b,1,V), new_cache)."""
         cfg = self.cfg
-        x = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
-        x, new_cache = decode_stack(cfg, params["stack"], cache, x, pos,
-                                    lora=(lora or {}).get("stack"),
-                                    gamma=gamma)
-        x = apply_norm(cfg, x, params, "final")
-        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        return x @ head.astype(x.dtype), new_cache
+        with dispatch.scope(cfg.use_pallas):
+            x = jnp.take(params["embed"], token,
+                         axis=0).astype(jnp.dtype(cfg.dtype))
+            x, new_cache = decode_stack(cfg, params["stack"], cache, x, pos,
+                                        lora=(lora or {}).get("stack"),
+                                        gamma=gamma)
+            x = apply_norm(cfg, x, params, "final")
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = x @ head.astype(x.dtype)
+        return logits, new_cache
 
     # ------------------------------------------------------------- specs
     def input_specs(self, shape, *, n_clients: int = 0, dtype=None):

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import lora_linear
+
 
 def rms_norm(x, scale, eps: float = 1e-6):
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
@@ -94,9 +96,8 @@ def mlp_apply(cfg, params, x, lora=None, gamma: float = 0.0):
 def linear(x, w, lora=None, gamma: float = 0.0):
     """y = x W (+ gamma * (x A^T) B^T) — the LoRA-aware projection primitive.
 
-    ``lora`` is ``{"a": (r, d_in), "b": (d_out, r)}`` or None.
+    ``lora`` is ``{"a": (r, d_in), "b": (d_out, r)}`` or None.  Routed through
+    ``repro.kernels.dispatch`` so configs with ``use_pallas`` hit the fused
+    Pallas kernel (with fused custom-VJP backward) instead of three XLA GEMMs.
     """
-    y = x @ w
-    if lora is not None:
-        y = y + gamma * ((x @ lora["a"].T) @ lora["b"].T)
-    return y
+    return lora_linear(x, w, lora, gamma)

@@ -66,6 +66,19 @@ def test_split_ab(tiny):
     assert num_lora_params(a) + num_lora_params(b) == num_lora_params(lora)
 
 
+def test_split_ab_tolerates_partial_nodes(tiny):
+    """Re-splitting an already-split tree (a-only / b-only nodes) works."""
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    a_tree, b_tree = split_ab(lora)
+    a2, b2 = split_ab(a_tree)
+    assert num_lora_params(a2) == num_lora_params(a_tree)
+    assert num_lora_params(b2) == 0
+    a3, b3 = split_ab(b_tree)
+    assert num_lora_params(a3) == 0
+    assert num_lora_params(b3) == num_lora_params(b_tree)
+
+
 @pytest.mark.parametrize("strategy,agg_a,agg_b", [
     ("fedit", True, True), ("ffa", False, True),
     ("fedsa", True, False)])
@@ -111,3 +124,35 @@ def test_upload_bytes_fedsa_half_of_fedit():
     assert fedsa < fedit
     # q adapters: A (r,4096)+B(4096,r) symmetric; v same -> exactly half
     assert fedsa * 2 == fedit
+
+
+def test_upload_bytes_accepts_concrete_rolora_flags(tiny):
+    """Regression: rolora flags from a concrete round_idx (numpy bools /
+    0-d jnp arrays) must not raise — only traced flags are rejected."""
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    lora_n = jax.tree.map(lambda x: x[None], lora)
+    (_, _), (a0, b0) = strategy_flags("rolora", 0)
+    (_, _), (a1, b1) = strategy_flags("rolora", 1)
+    even = upload_bytes(lora_n, a0, b0)          # A rounds upload A only
+    odd = upload_bytes(lora_n, a1, b1)           # B rounds upload B only
+    assert even > 0 and odd > 0
+    assert even + odd == upload_bytes(lora_n, True, True)
+    # concrete ints and 0-d device arrays also work
+    assert upload_bytes(lora_n, 1, 0) == even
+    assert upload_bytes(lora_n, jnp.asarray(True), jnp.asarray(False)) == even
+
+
+def test_upload_bytes_rejects_traced_flags(tiny):
+    """Host-only: traced flags (rolora under jit) raise a clear TypeError
+    instead of a TracerBoolConversionError deep inside."""
+    cfg, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    lora_n = jax.tree.map(lambda x: x[None], lora)
+
+    def traced(round_idx):
+        (_, _), (aa, ab) = strategy_flags("rolora", round_idx)
+        return upload_bytes(lora_n, aa, ab)
+
+    with pytest.raises(TypeError, match="host-only"):
+        jax.jit(traced)(jnp.asarray(0))

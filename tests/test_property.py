@@ -1,4 +1,13 @@
-"""Hypothesis property-based tests on the system's invariants."""
+"""Hypothesis property-based tests on the system's invariants.
+
+``hypothesis`` is an optional test dependency (``pip install hypothesis`` or
+the ``[test]`` extra in pyproject.toml); without it this module skips instead
+of breaking collection for the whole suite.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
