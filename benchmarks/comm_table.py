@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import LoRAConfig
-from repro.core.aggregation import strategy_flags, upload_bytes
+from repro.core.aggregation import STRATEGIES, get_strategy
 from repro.core.lora import init_lora
 from repro.models.api import build_model
 
@@ -24,9 +24,10 @@ def main(emit=print):
     for rank in (8, 64, 512):
         lora1 = init_lora(zeros, jax.random.key(1), LoRAConfig(rank=rank))
         lora_n = jax.tree.map(lambda x: x[None], lora1)
-        for strat in ("fedit", "ffa", "fedsa", "rolora"):
-            (_, _), (agg_a, agg_b) = strategy_flags(strat, 0)
-            mb = upload_bytes(lora_n, bool(agg_a), bool(agg_b)) / 1e6
+        for strat in STRATEGIES:
+            # round 0 accounting (rolora alternates A/B rounds; flora
+            # uploads both matrices for the stacked product)
+            mb = get_strategy(strat).upload_bytes(lora_n, 0) / 1e6
             emit(f"comm,{strat},{rank},{mb:.2f}")
 
 

@@ -77,14 +77,17 @@ METHODS = {
     # extra baselines implemented for completeness
     "FedIT":         ("fedit", "lora"),
     "FFA-LoRA":      ("ffa", "lora"),
+    "FLoRA":         ("flora", "lora"),     # stacking aggregation (2409.05976)
 }
 
 
 def run_method(method: str, *, rank: int, clients: int = 3, rounds: int = 30,
                local_steps: int = 5, lr: float = 1.0, alpha: float = 8.0,
                partition: str = "iid", optimizer: str = "sgd", seed: int = 0,
-               model=None, base=None, targets=("q", "v")):
-    """One federated fine-tuning run; returns the trainer (history inside)."""
+               model=None, base=None, targets=("q", "v"),
+               chunk_rounds: int = 0, data_mode: str = "host"):
+    """One federated fine-tuning run; returns the trainer (history inside).
+    With the default ``chunk_rounds=0`` the whole run is one compiled scan."""
     strategy, scaling = METHODS[method]
     if model is None:
         model, base = pretrained_base()
@@ -99,7 +102,8 @@ def run_method(method: str, *, rank: int, clients: int = 3, rounds: int = 30,
         fed_cfg=FederatedConfig(num_clients=clients, local_steps=local_steps,
                                 aggregation=strategy, partition=partition),
         opt_cfg=OptimizerConfig(name=optimizer, lr=lr),
-        seed=seed, base_params=base)
+        seed=seed, base_params=base, chunk_rounds=chunk_rounds,
+        data_mode=data_mode)
     tr.run(rounds)
     return tr
 

@@ -8,8 +8,8 @@ import os
 import sys
 import time
 
-SUITES = ("comm", "kernels", "roofline", "fig9", "fig3", "fig2", "fig4",
-          "fig8", "tab12")
+SUITES = ("comm", "kernels", "engine", "roofline", "fig9", "fig3", "fig2",
+          "fig4", "fig8", "tab12")
 
 
 def main() -> None:
@@ -34,6 +34,10 @@ def main() -> None:
     if "kernels" in want:
         from benchmarks import kernels_bench
         run("kernels_bench", kernels_bench.main)
+    if "engine" in want:
+        from benchmarks import engine_bench
+        run("engine_bench", engine_bench.main,
+            **({"rounds": rounds} if rounds else {}))
     if "roofline" in want:
         from benchmarks import roofline
         run("roofline", roofline.main)

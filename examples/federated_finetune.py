@@ -14,7 +14,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import numpy as np
 
 from benchmarks.common import pretrained_base
-from repro.checkpoint.io import save_federated_state
 from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
 from repro.core.federated import FederatedTrainer
 from repro.data.synthetic import FederatedDataset
@@ -23,6 +22,8 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=200)
 ap.add_argument("--rank", type=int, default=64)
 ap.add_argument("--clients", type=int, default=4)
+ap.add_argument("--chunk-rounds", type=int, default=10,
+                help="rounds per compiled scan chunk")
 args = ap.parse_args()
 
 print("=== stage 1: pretrain base (cached) ===")
@@ -37,15 +38,15 @@ tr = FederatedTrainer(
     lora_cfg=LoRAConfig(rank=args.rank, alpha=8.0, scaling="sfedlora"),
     fed_cfg=FederatedConfig(num_clients=args.clients, local_steps=5,
                             aggregation="fedsa", partition="dirichlet"),
-    opt_cfg=OptimizerConfig(name="sgd", lr=1.0))  # tiny-model-scale lr
+    opt_cfg=OptimizerConfig(name="sgd", lr=1.0),  # tiny-model-scale lr
+    chunk_rounds=args.chunk_rounds)  # each chunk is one compiled lax.scan
 print(f"gamma_z = 8*sqrt({args.clients}/{args.rank}) = {tr.gamma:.4f}")
 tr.run(args.rounds, log_every=max(1, args.rounds // 20))
 
 print("=== stage 3: evaluate + checkpoint ===")
 for c in range(args.clients):
     print(f"client {c} held-out ppl: {tr.eval_perplexity(client=c):.3f}")
-save_federated_state("/tmp/sfedlora_ckpt.npz", tr.base, tr.lora,
-                     tr.opt_state, tr.round_idx)
+tr.save("/tmp/sfedlora_ckpt.npz")   # carries PRNG key + round for bit-exact resume
 print("checkpoint -> /tmp/sfedlora_ckpt.npz")
 start = np.exp(tr.history[0]["loss"])
 end = np.exp(np.mean([h["loss"] for h in tr.history[-10:]]))

@@ -36,7 +36,9 @@ def load_pytree(path: str):
         node = tree
         for p in parts[:-1]:
             node = node.setdefault(p, {})
-        node[parts[-1]] = jnp.asarray(data[key])
+        arr = data[key]
+        # string leaves (e.g. serialized RNG stream state) stay host-side
+        node[parts[-1]] = arr if arr.dtype.kind in "SU" else jnp.asarray(arr)
     return _unlistify(tree)
 
 
@@ -48,11 +50,36 @@ def _unlistify(node):
     return node
 
 
-def save_federated_state(path: str, base, lora, opt_state, round_idx: int):
-    save_pytree(path, {"base": base, "lora": lora, "opt": opt_state,
-                       "round": np.asarray(round_idx)})
+def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
+                         *, key=None, data_state: str = None):
+    """Checkpoint one federated run.
+
+    ``key`` (the trainer's carried JAX PRNG key) and ``data_state`` (the host
+    dataset's serialized RNG stream state) make chunked runs resume
+    bit-exactly: the restored engine continues the identical random stream
+    from ``round_idx``.
+    """
+    tree = {"base": base, "lora": lora, "opt": opt_state,
+            "round": np.asarray(round_idx)}
+    if key is not None:
+        tree["prng_key"] = np.asarray(jax.random.key_data(key))
+    if data_state is not None:
+        tree["data_state"] = np.asarray(data_state)
+    save_pytree(path, tree)
 
 
-def load_federated_state(path: str):
+def load_federated_state(path: str, *, full: bool = False):
+    """Returns (base, lora, opt, round) — or, with ``full=True``,
+    (base, lora, opt, round, key, data_state) where the trailing two are
+    None for checkpoints written without them."""
     t = load_pytree(path)
-    return t["base"], t["lora"], t.get("opt", {}), int(t["round"])
+    out = (t["base"], t["lora"], t.get("opt", {}), int(t["round"]))
+    if not full:
+        return out
+    key = None
+    if "prng_key" in t:
+        key = jax.random.wrap_key_data(jnp.asarray(t["prng_key"]))
+    data_state = None
+    if "data_state" in t:
+        data_state = str(np.asarray(t["data_state"]))
+    return out + (key, data_state)

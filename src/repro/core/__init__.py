@@ -1,4 +1,6 @@
 from repro.core.scaling import scaling_factor, SCALINGS
 from repro.core.lora import init_lora, merge_lora
-from repro.core.aggregation import STRATEGIES, aggregate_clients
-from repro.core.federated import FederatedTrainer, make_fed_round_step
+from repro.core.aggregation import (REGISTRY, STRATEGIES, Strategy,
+                                    aggregate_clients, get_strategy)
+from repro.core.federated import (FederatedTrainer, make_fed_round_step,
+                                  make_run_chunk)

@@ -3,40 +3,46 @@
 A client-stacked LoRA tree has a leading client dim N on every leaf:
 ``a: (N, ..., r, d_in)``, ``b: (N, ..., d_out, r)``.
 
+Each strategy is a frozen dataclass in :data:`REGISTRY` bundling the three
+server-side concerns the engine needs:
+
+  - ``mask_grads``   which adapter matrices train during local steps,
+  - ``aggregate``    the server-side update over the client dim,
+  - ``upload_bytes`` per-round client->server communication accounting.
+
+Registered strategies:
+
   fedit   aggregate A and B (FedIT, Zhang et al. 2024)
   ffa     A frozen at init (never trained), aggregate B (FFA-LoRA, Sun 2024)
   fedsa   aggregate A only, B stays local (FedSA-LoRA, Guo 2025 — the
           substrate for SFed-LoRA)
   rolora  alternating rounds: train+aggregate A with B frozen, then B with A
           frozen (RoLoRA, Chen 2025)
+  flora   stacking aggregation (FLoRA, arXiv 2409.05976): clients upload both
+          matrices, the server forms the exact mean update mean_i(B_i A_i)
+          via the stacked product and redistributes a rank-r refactoring of
+          it to every client — proof the registry expresses aggregators the
+          old (agg_a, agg_b) flag tuples could not.
 
-Strategies are expressed as two traced-bool pairs so one jitted round step
-serves every method:
+The first four are :class:`FlagStrategy`/:class:`AlternatingStrategy`
+instances expressed as two traced-bool pairs so one jitted round step serves
+every method:
   train flags  (train_a, train_b): gradient mask during local steps
   agg flags    (agg_a, agg_b):     server-side mean over the client dim
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-STRATEGIES = ("fedit", "ffa", "fedsa", "rolora")
 
-
-def strategy_flags(name: str, round_idx):
-    """Returns ((train_a, train_b), (agg_a, agg_b)); entries may be traced."""
-    if name == "fedit":
-        return (True, True), (True, True)
-    if name == "ffa":
-        return (False, True), (False, True)
-    if name == "fedsa":
-        return (True, True), (True, False)
-    if name == "rolora":
-        a_round = (round_idx % 2 == 0)
-        return (a_round, ~a_round if hasattr(a_round, "dtype")
-                else not a_round), (a_round, ~a_round if
-                                    hasattr(a_round, "dtype") else not a_round)
-    raise ValueError(f"unknown strategy '{name}'")
+def negate_flag(flag):
+    """NOT over a strategy flag, uniform across concrete Python bools and
+    traced / 0-d device bools (``not`` would raise on tracers)."""
+    out = jnp.logical_not(flag)
+    return out if isinstance(flag, jax.Array) else bool(out)
 
 
 def _map_ab(tree, fn_a, fn_b):
@@ -50,6 +56,26 @@ def _map_ab(tree, fn_a, fn_b):
                 if "b" in node:
                     out["b"] = fn_b(node["b"])
                 return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(tree)
+
+
+def _map_ab_pairs(tree, fn_pair):
+    """Apply ``fn_pair({"a": .., "b": ..}) -> node`` to every adapter node.
+
+    Strategies that couple A and B (e.g. stacking) need both matrices;
+    a-only / b-only adapter nodes (which ``_map_ab`` tolerates) are an
+    error here — silently skipping them would leave those adapters
+    unaggregated and let clients diverge."""
+    def walk(node):
+        if isinstance(node, dict):
+            if set(node) <= {"a", "b"} and node:
+                if set(node) != {"a", "b"}:
+                    raise ValueError(
+                        "pair-coupled aggregation (e.g. flora stacking) "
+                        f"needs both 'a' and 'b'; got {sorted(node)}")
+                return fn_pair(node)
             return {k: walk(v) for k, v in node.items()}
         return node
     return walk(tree)
@@ -112,3 +138,146 @@ def upload_bytes(lora_stacked, agg_a, agg_b) -> int:
         return f
     _map_ab(lora_stacked, count(agg_a), count(agg_b))
     return total
+
+
+# ----------------------------------------------------------------- registry
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """One server-side federated LoRA strategy.
+
+    Subclasses override the flag accessors (flag-expressible strategies) or
+    :meth:`aggregate` directly (structural aggregators like stacking).
+    ``round_idx`` may be a traced scalar everywhere except
+    :meth:`upload_bytes`, which is host-only accounting.
+    """
+    name: str
+
+    def train_flags(self, round_idx):
+        return (True, True)
+
+    def agg_flags(self, round_idx):
+        return (True, True)
+
+    def mask_grads(self, grads, round_idx):
+        ta, tb = self.train_flags(round_idx)
+        return mask_grads(grads, ta, tb)
+
+    def aggregate(self, lora_stacked, round_idx, *, weights=None):
+        aa, ab = self.agg_flags(round_idx)
+        return aggregate_clients(lora_stacked, aa, ab, weights=weights)
+
+    def upload_bytes(self, lora_stacked, round_idx: int = 0) -> int:
+        """Per-round client->server bytes (host-only; concrete round_idx)."""
+        aa, ab = self.agg_flags(round_idx)
+        return upload_bytes(lora_stacked, aa, ab)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlagStrategy(Strategy):
+    """A strategy fully described by static train/aggregate flag pairs."""
+    train_a: bool = True
+    train_b: bool = True
+    agg_a: bool = True
+    agg_b: bool = True
+
+    def train_flags(self, round_idx):
+        return (self.train_a, self.train_b)
+
+    def agg_flags(self, round_idx):
+        return (self.agg_a, self.agg_b)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlternatingStrategy(Strategy):
+    """RoLoRA: even rounds train+aggregate A (B frozen), odd rounds B."""
+
+    def train_flags(self, round_idx):
+        a_round = round_idx % 2 == 0
+        return (a_round, negate_flag(a_round))
+
+    def agg_flags(self, round_idx):
+        return self.train_flags(round_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackingStrategy(Strategy):
+    """FLoRA-style concat-then-redistribute aggregation.
+
+    Clients upload both matrices.  Stacking the A_i along rows and the B_i
+    along columns makes the stacked product the exact sum of client updates:
+    ``B_stack @ A_stack = sum_i B_i A_i`` — no averaging error from
+    aggregating the factors independently (FLoRA's core argument).  The
+    (weighted) mean update is then redistributed as a rank-r factorization
+    (truncated SVD) so every client continues from identical adapters of the
+    original shape, without touching the frozen base weights.
+    """
+
+    def aggregate(self, lora_stacked, round_idx, *, weights=None):
+        def redistribute(node):
+            a, b = node["a"], node["b"]          # (N,...,r,di), (N,...,do,r)
+            n, r = a.shape[0], a.shape[-2]
+            if weights is None:
+                w = jnp.full((n,), 1.0 / n, jnp.float32)
+            else:
+                w = weights.astype(jnp.float32)
+                w = w / jnp.maximum(w.sum(), 1e-9)
+            # stacked product == sum_i B_i A_i, here with participation weights
+            m = jnp.einsum("n,n...or,n...ri->...oi",
+                           w, b.astype(jnp.float32), a.astype(jnp.float32))
+            u, s, vh = jnp.linalg.svd(m, full_matrices=False)
+            k = min(r, s.shape[-1])
+            sr = jnp.sqrt(s[..., :k])
+            a_new = sr[..., :, None] * vh[..., :k, :]
+            b_new = u[..., :, :k] * sr[..., None, :]
+            if k < r:                             # rank exceeds matrix dims
+                pad = [(0, 0)] * a_new.ndim
+                pad[-2] = (0, r - k)
+                a_new = jnp.pad(a_new, pad)
+                pad = [(0, 0)] * b_new.ndim
+                pad[-2] = (0, 0)
+                pad[-1] = (0, r - k)
+                b_new = jnp.pad(b_new, pad)
+            tile = lambda x, like: jnp.broadcast_to(
+                x[None], (n,) + x.shape).astype(like.dtype)
+            return {"a": tile(a_new, a), "b": tile(b_new, b)}
+        return _map_ab_pairs(lora_stacked, redistribute)
+
+
+REGISTRY = {
+    "fedit": FlagStrategy("fedit", True, True, True, True),
+    "ffa": FlagStrategy("ffa", False, True, False, True),
+    "fedsa": FlagStrategy("fedsa", True, True, True, False),
+    "rolora": AlternatingStrategy("rolora"),
+    "flora": StackingStrategy("flora"),
+}
+
+STRATEGIES = tuple(REGISTRY)
+
+
+def get_strategy(name) -> Strategy:
+    """Look up a strategy by name (a Strategy instance passes through)."""
+    if isinstance(name, Strategy):
+        return name
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy '{name}'; options {STRATEGIES}") \
+            from None
+
+
+def strategy_flags(name: str, round_idx):
+    """Back-compat view of a flag-expressible strategy:
+    ((train_a, train_b), (agg_a, agg_b)); entries may be traced.
+
+    Raises for strategies whose server step is NOT expressible as agg
+    flags (e.g. flora's stacking aggregate): feeding their train/agg flags
+    to ``aggregate_clients`` would silently compute plain means — use
+    ``get_strategy(name).aggregate(...)`` instead."""
+    s = get_strategy(name)
+    if type(s).aggregate is not Strategy.aggregate:
+        raise ValueError(
+            f"strategy '{s.name}' is not flag-expressible (it overrides "
+            "aggregate()); use get_strategy(name) and its "
+            "mask_grads/aggregate/upload_bytes methods")
+    return s.train_flags(round_idx), s.agg_flags(round_idx)

@@ -1,4 +1,4 @@
-"""Federated LoRA fine-tuning: the jitted round step and a host-level trainer.
+"""Federated LoRA fine-tuning: a compiled multi-round engine.
 
 One federated round (paper §3):
   1. every client runs ``local_steps`` SGD/AdamW steps on its LoRA params
@@ -8,46 +8,70 @@ One federated round (paper §3):
      one small all-reduce over the client axes),
   3. the aggregate is broadcast back (same collective).
 
+Engine architecture (the ROADMAP "fast as the hardware allows" move):
+
+  round body   one round as a pure function of (state, batches, round_idx,
+               weights) — shared by every execution mode below.
+  run_chunk    ``jax.lax.scan`` of the round body over a *chunk* of rounds,
+               entirely on device.  A carried PRNG key is split once per
+               round inside the scan; partial participation is sampled from
+               it with ``jax.random`` (choice without replacement); batches
+               either stream in as stacked scan inputs (host data) or are
+               synthesized on device by a ``batch_fn`` (``jax.random``
+               inside the scan — zero host traffic).  Client/optimizer
+               carries are donated, and the stacked per-round metrics come
+               back in one transfer, so the host syncs once per chunk
+               instead of once per round.
+  FederatedTrainer   a thin host wrapper that keeps the public API (``run``,
+               ``run_round``, ``eval_perplexity``, ``history``) and calls
+               ``run_chunk`` in chunks of ``chunk_rounds`` (default: the
+               ``log_every`` stride, else the whole request).  ``run_round``
+               is a chunk of one, so per-round and chunked execution are the
+               same compiled computation and stay bit-identical.
+
 The scaling factor gamma = scaling_factor(scheme, alpha, r, N) multiplies the
 adapter product in every forward pass — SFed-LoRA's contribution is that this
 is sqrt(N/r), tied to the *distribution config*, not just the adapter shape.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (aggregate_clients, mask_grads,
-                                    strategy_flags)
+from repro.core.aggregation import get_strategy
 from repro.core.lora import init_lora
 from repro.core.scaling import scaling_factor
 from repro.optim.optimizers import apply_updates, global_norm, make_optimizer
 
 
-def make_fed_round_step(model, *, strategy: str, opt_cfg, gamma: float,
-                        donate: bool = True, jit: bool = True):
-    """Returns round_step(base, lora_N, opt_N, batches, round_idx).
+def participation_weights(key, num_clients: int, num_sampled: int):
+    """(N,) 0/1 mask with exactly ``num_sampled`` ones, sampled uniformly
+    without replacement from the round's PRNG key (device-side)."""
+    perm = jax.random.permutation(key, num_clients)
+    return jnp.zeros((num_clients,), jnp.float32).at[perm[:num_sampled]].set(1.0)
+
+
+def make_round_body(model, *, strategy, opt_cfg, gamma: float):
+    """Returns round_body(base, lora_N, opt_N, batches, round_idx, weights).
 
     ``lora_N``/``opt_N`` have a leading client dim; ``batches`` leaves are
     (N, local_steps, batch, ...).  Returns (lora_N, opt_N, metrics).
-    With ``jit=False`` returns the raw function (the dry-run wraps it in its
-    own pjit with explicit shardings).
     """
-    opt_init, opt_update = make_optimizer(opt_cfg)
+    strat = get_strategy(strategy)
+    _, opt_update = make_optimizer(opt_cfg)
 
     def client_local(base, lora, opt_state, batches, round_idx):
-        (train_a, train_b), _ = strategy_flags(strategy, round_idx)
-
         def step(carry, batch):
             lo, st = carry
             def loss_fn(l):
                 return model.loss(base, batch, lora=l, gamma=gamma)
             (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(lo)
             gnorm = global_norm(grads)
-            grads = mask_grads(grads, train_a, train_b)
+            grads = strat.mask_grads(grads, round_idx)
             if opt_cfg.grad_clip:
                 from repro.optim.optimizers import clip_by_global_norm
                 grads = clip_by_global_norm(grads, opt_cfg.grad_clip)
@@ -58,7 +82,7 @@ def make_fed_round_step(model, *, strategy: str, opt_cfg, gamma: float,
         (lora, opt_state), ms = jax.lax.scan(step, (lora, opt_state), batches)
         return lora, opt_state, ms
 
-    def round_step(base, lora_N, opt_N, batches, round_idx, weights=None):
+    def round_body(base, lora_N, opt_N, batches, round_idx, weights=None):
         """``weights`` (N,) in {0,1}: partial participation — non-sampled
         clients keep their previous local state and only receive the
         aggregate."""
@@ -72,25 +96,127 @@ def make_fed_round_step(model, *, strategy: str, opt_cfg, gamma: float,
                 new, old)
             new_lora = sel(new_lora, lora_N)
             new_opt = sel(new_opt, opt_N)
-        _, (agg_a, agg_b) = strategy_flags(strategy, round_idx)
-        new_lora = aggregate_clients(new_lora, agg_a, agg_b, weights=weights)
+        new_lora = strat.aggregate(new_lora, round_idx, weights=weights)
         metrics = {"loss": ms["loss"].mean(), "grad_norm": ms["grad_norm"].mean()}
         return new_lora, new_opt, metrics
 
+    return round_body
+
+
+def make_fed_round_step(model, *, strategy, opt_cfg, gamma: float,
+                        donate: bool = True, jit: bool = True):
+    """Single-round entry point (back-compat shim over the round body).
+
+    Returns round_step(base, lora_N, opt_N, batches, round_idx, weights).
+    With ``jit=False`` returns the raw function (multi-device tests wrap it
+    in their own pjit with explicit shardings).
+    """
+    round_step = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
+                                 gamma=gamma)
     if not jit:
         return round_step
     return jax.jit(round_step, donate_argnums=(1, 2) if donate else ())
 
 
+def make_run_chunk(model, *, strategy, opt_cfg, gamma: float,
+                   participation: float = 1.0, batch_fn=None,
+                   donate: bool = True, jit: bool = True):
+    """Build the chunked scan executor.
+
+    Returns run_chunk(base, lora_N, opt_N, key, round0, batches=None,
+    num_rounds=None) -> (lora_N, opt_N, key, metrics):
+
+      - ``key``     carried PRNG key; split once per round inside the scan
+                    (participation sampling and on-device batch synthesis
+                    both derive from it, so per-round and chunked execution
+                    consume randomness identically).
+      - ``round0``  traced scalar: global index of the chunk's first round
+                    (rolora alternation, schedules, resume).
+      - ``batches`` host-staged data with a leading (num_rounds,) dim on
+                    every leaf — required unless the engine was built with a
+                    ``batch_fn(key, round_idx) -> batches`` that generates
+                    data on device inside the scan, in which case the static
+                    ``num_rounds`` sets the chunk length.
+      - metrics come back stacked: {"loss": (num_rounds,), ...}.
+
+    ``lora_N``/``opt_N``/``key`` are donated when ``jit`` and ``donate``.
+    """
+    round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
+                                 gamma=gamma)
+
+    def run_chunk(base, lora_N, opt_N, key, round0, batches=None,
+                  num_rounds=None):
+        num_clients = jax.tree.leaves(lora_N)[0].shape[0]
+        num_sampled = max(1, int(round(participation * num_clients)))
+
+        def scan_step(carry, xs):
+            lora_c, opt_c, k = carry
+            k, k_round = jax.random.split(k)
+            k_data, k_sample = jax.random.split(k_round)
+            if batch_fn is None:
+                round_idx, b = xs
+            else:
+                round_idx = xs
+                b = batch_fn(k_data, round_idx)
+            weights = None
+            if participation < 1.0:
+                weights = participation_weights(k_sample, num_clients,
+                                                num_sampled)
+            lora_c, opt_c, metrics = round_body(base, lora_c, opt_c, b,
+                                                round_idx, weights)
+            return (lora_c, opt_c, k), metrics
+
+        if batch_fn is None:
+            if batches is None:
+                raise ValueError("run_chunk needs `batches` unless the "
+                                 "engine was built with a batch_fn")
+            n_r = jax.tree.leaves(batches)[0].shape[0]
+            xs = (round0 + jnp.arange(n_r), batches)
+        else:
+            if num_rounds is None:
+                raise ValueError("run_chunk needs a static `num_rounds` "
+                                 "when batches are generated on device")
+            xs = round0 + jnp.arange(num_rounds)
+        (lora_N, opt_N, key), ms = jax.lax.scan(
+            scan_step, (lora_N, opt_N, key), xs)
+        return lora_N, opt_N, key, ms
+
+    if not jit:
+        return run_chunk
+    return jax.jit(run_chunk, static_argnames=("num_rounds",),
+                   donate_argnums=(1, 2, 3) if donate else ())
+
+
 class FederatedTrainer:
-    """Host-level orchestration: state, rounds, evaluation."""
+    """Host-level orchestration: state, chunked rounds, evaluation.
+
+    ``data_mode``:
+      "host"    batches come from ``dataset.round_batch`` on the host and are
+                staged per chunk as stacked scan inputs (default — preserves
+                the exact host data stream).
+      "device"  batches are synthesized inside the scan from the carried PRNG
+                key via :class:`repro.data.synthetic.DeviceFederatedData`
+                (same topic tables as the host dataset; zero host traffic —
+                the large-N stress-test path).
+
+    ``chunk_rounds`` caps how many rounds one ``run_chunk`` call scans over
+    (default: the ``log_every`` stride, else the whole ``run`` request).
+    ``mesh``: when given, base params are tensor-sharded and the client dim of
+    LoRA/optimizer state shards over the mesh's client axes ("pod"/"data")
+    per ``sharding/rules.py``.
+    """
 
     def __init__(self, model, dataset, *, lora_cfg, fed_cfg, opt_cfg,
-                 seed: int = 0, base_params=None):
+                 seed: int = 0, base_params=None, data_mode: str = "host",
+                 chunk_rounds: int = 0, mesh=None):
         self.model = model
         self.dataset = dataset
         self.fed_cfg = fed_cfg
         self.lora_cfg = lora_cfg
+        self.opt_cfg = opt_cfg
+        self.data_mode = data_mode
+        self.chunk_rounds = chunk_rounds
+        self.mesh = mesh
         n = fed_cfg.num_clients
         self.gamma = scaling_factor(lora_cfg.scaling, lora_cfg.alpha,
                                     lora_cfg.rank, n)
@@ -106,43 +232,113 @@ class FederatedTrainer:
         opt1 = opt_init(lora1)
         self.opt_state = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), opt1)
-        self.round_step = make_fed_round_step(
+
+        batch_fn = None
+        if data_mode == "device":
+            from repro.data.synthetic import DeviceFederatedData
+            self.device_data = DeviceFederatedData.from_host(dataset)
+            local_steps = fed_cfg.local_steps
+            batch_fn = lambda k, ridx: {
+                "tokens": self.device_data.sample_round(k, local_steps)}
+        elif data_mode != "host":
+            raise ValueError(f"unknown data_mode '{data_mode}'")
+        self._run_chunk = make_run_chunk(
             model, strategy=fed_cfg.aggregation, opt_cfg=opt_cfg,
-            gamma=self.gamma, donate=False)
+            gamma=self.gamma, participation=fed_cfg.participation,
+            batch_fn=batch_fn, donate=True)
+        # all round-level randomness (participation sampling, device-side
+        # data) flows from this carried JAX key — no separate host RNG
+        self._key = jax.random.key(seed + 31337)
         self.round_idx = 0
         self.history = []
+        if mesh is not None:
+            self._place_on_mesh(mesh)
         # cached so repeated evals reuse one compilation (gamma is static:
         # the fused kernel tier bakes it into the Pallas kernels at trace
         # time, so it cannot be a traced argument)
         self._eval_loss = jax.jit(model.loss, static_argnames=("gamma",))
-        import numpy as _np
-        self._rng = _np.random.default_rng(seed + 31337)
+
+    @functools.cached_property
+    def round_step(self):
+        """Single-round entry over externally supplied batches (callers with
+        modality stubs the synthetic dataset cannot produce):
+        round_step(base, lora_N, opt_N, batches, round_idx, weights=None).
+        Compiled lazily — the engine itself runs through ``run_chunk``."""
+        return make_fed_round_step(
+            self.model, strategy=self.fed_cfg.aggregation,
+            opt_cfg=self.opt_cfg, gamma=self.gamma, donate=False)
+
+    # ------------------------------------------------------------- sharding
+
+    def _place_on_mesh(self, mesh):
+        from repro.sharding import rules
+        self.base = jax.device_put(self.base,
+                                   rules.params_sharding(self.base, mesh))
+        self.lora = jax.device_put(self.lora,
+                                   rules.lora_sharding(self.lora, mesh))
+        self.opt_state = jax.device_put(
+            self.opt_state, rules.lora_sharding(self.opt_state, mesh))
+
+    def _mesh_scope(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.sharding.specs import use_mesh
+        return use_mesh(self.mesh)
+
+    # -------------------------------------------------------------- running
+
+    def _stage_batches(self, num_rounds: int):
+        """Host data for the next ``num_rounds`` rounds, stacked for the
+        scan: leaves (num_rounds, N, local_steps, batch, seq)."""
+        nb = np.stack([self.dataset.round_batch(self.fed_cfg.local_steps)
+                       for _ in range(num_rounds)])
+        batches = {"tokens": jnp.asarray(nb)}
+        if self.mesh is not None:
+            from repro.sharding import rules
+            batches = jax.device_put(
+                batches, rules.chunked_inputs_sharding(batches, self.mesh))
+        return batches
+
+    def _run_one_chunk(self, num_rounds: int):
+        kwargs = {}
+        if self.data_mode == "device":
+            kwargs["num_rounds"] = num_rounds
+        else:
+            kwargs["batches"] = self._stage_batches(num_rounds)
+        with self._mesh_scope():
+            self.lora, self.opt_state, self._key, ms = self._run_chunk(
+                self.base, self.lora, self.opt_state, self._key,
+                jnp.asarray(self.round_idx, jnp.int32), **kwargs)
+        ms = {k: np.asarray(v) for k, v in ms.items()}
+        out = []
+        for i in range(num_rounds):
+            self.round_idx += 1
+            m = {k: float(v[i]) for k, v in ms.items()}
+            m["round"] = self.round_idx
+            self.history.append(m)
+            out.append(m)
+        return out
 
     def run_round(self):
-        nb = self.dataset.round_batch(self.fed_cfg.local_steps)
-        batches = {"tokens": jnp.asarray(nb)}
-        n = self.fed_cfg.num_clients
-        weights = None
-        if self.fed_cfg.participation < 1.0:
-            k = max(1, int(round(self.fed_cfg.participation * n)))
-            idx = self._rng.choice(n, size=k, replace=False)
-            weights = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
-        self.lora, self.opt_state, m = self.round_step(
-            self.base, self.lora, self.opt_state, batches,
-            jnp.asarray(self.round_idx), weights)
-        self.round_idx += 1
-        m = {k: float(v) for k, v in m.items()}
-        m["round"] = self.round_idx
-        self.history.append(m)
-        return m
+        """One federated round (a chunk of one — same compiled round body as
+        chunked execution, so the two stay bit-identical)."""
+        return self._run_one_chunk(1)[0]
 
     def run(self, rounds=None, log_every: int = 0):
+        # each distinct chunk length compiles its own scan; a trailing
+        # partial chunk (rounds % stride != 0) therefore costs one extra
+        # compile — pick chunk_rounds dividing the round budget to avoid it
         rounds = rounds or self.fed_cfg.rounds
-        for _ in range(rounds):
-            m = self.run_round()
-            if log_every and self.round_idx % log_every == 0:
-                print(f"round {self.round_idx:4d}  loss {m['loss']:.4f}  "
-                      f"|g| {m['grad_norm']:.3e}  ppl {np.exp(m['loss']):.2f}")
+        done = 0
+        while done < rounds:
+            chunk = min(self.chunk_rounds or log_every or rounds,
+                        rounds - done)
+            for m in self._run_one_chunk(chunk):
+                if log_every and m["round"] % log_every == 0:
+                    print(f"round {m['round']:4d}  loss {m['loss']:.4f}  "
+                          f"|g| {m['grad_norm']:.3e}  "
+                          f"ppl {np.exp(m['loss']):.2f}")
+            done += chunk
         return self.history
 
     def eval_perplexity(self, batch: int = 16, client: int = 0) -> float:
@@ -152,3 +348,32 @@ class FederatedTrainer:
         loss, _ = self._eval_loss(self.base, {"tokens": toks}, lora=lora_i,
                                   gamma=self.gamma)
         return float(jnp.exp(loss))
+
+    # ----------------------------------------------------------- checkpoint
+
+    def save(self, path: str) -> None:
+        """Checkpoint state + round index + PRNG key (+ the host dataset's
+        RNG stream state) so a restored run continues bit-exactly."""
+        from repro.checkpoint.io import save_federated_state
+        data_state = None
+        if self.data_mode == "host" and hasattr(self.dataset, "rng_state"):
+            data_state = self.dataset.rng_state()
+        save_federated_state(path, self.base, self.lora, self.opt_state,
+                             self.round_idx, key=self._key,
+                             data_state=data_state)
+
+    def restore(self, path: str) -> None:
+        from repro.checkpoint.io import load_federated_state
+        base, lora, opt, rnd, key, data_state = load_federated_state(
+            path, full=True)
+        self.base, self.lora, self.opt_state = base, lora, opt
+        self.round_idx = rnd
+        # drop history entries from beyond the restored round so consumers
+        # never mix two timelines
+        self.history = [h for h in self.history if h["round"] <= rnd]
+        if key is not None:
+            self._key = key
+        if data_state is not None and hasattr(self.dataset, "set_rng_state"):
+            self.dataset.set_rng_state(data_state)
+        if self.mesh is not None:
+            self._place_on_mesh(self.mesh)

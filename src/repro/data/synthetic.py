@@ -8,6 +8,8 @@ paper's heterogeneity experiments vary.
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
 
@@ -87,3 +89,66 @@ class FederatedDataset:
         parts = [self.lm.sample(rng, t, per, self.seq_len)
                  for t in range(self.lm.num_topics)]
         return np.concatenate(parts)[:batch]
+
+    # ---- stream-state (de)serialization, for bit-exact checkpoint resume
+
+    def rng_state(self) -> str:
+        """Serialized per-client generator states (JSON)."""
+        return json.dumps([r.bit_generator.state for r in self.rngs])
+
+    def set_rng_state(self, state: str) -> None:
+        for rng, st in zip(self.rngs, json.loads(state)):
+            rng.bit_generator.state = st
+
+
+class DeviceFederatedData:
+    """On-device mirror of :class:`FederatedDataset`: the same topic
+    transition tables and client mixtures, but sampled with ``jax.random``
+    as a pure function of a PRNG key — usable *inside* the engine's
+    ``lax.scan`` over rounds (``core/federated.py``), so large-N runs
+    generate data where it is consumed instead of streaming it from host.
+    """
+
+    def __init__(self, succ, mix, noise: float, batch: int, seq_len: int):
+        import jax.numpy as jnp
+        self.succ = jnp.asarray(succ)               # (topics, vocab, branch)
+        self.mix = jnp.asarray(mix, jnp.float32)    # (clients, topics)
+        self.noise = float(noise)
+        self.batch = batch
+        self.seq_len = seq_len
+        self.vocab = int(self.succ.shape[1])
+
+    @classmethod
+    def from_host(cls, ds: "FederatedDataset") -> "DeviceFederatedData":
+        return cls(ds.lm.succ, ds.mix, ds.lm.noise, ds.batch, ds.seq_len)
+
+    def sample_round(self, key, local_steps: int = 1):
+        """(num_clients, local_steps, batch, seq) int32, pure jax (jittable,
+        scannable, vmappable)."""
+        import jax
+        import jax.numpy as jnp
+        n, topics = self.mix.shape
+
+        def one_batch(k, mix_i):
+            kt, k0, kseq = jax.random.split(k, 3)
+            topic = jax.random.choice(kt, topics, p=mix_i)
+            succ_t = self.succ[topic]               # (vocab, branch)
+            t0 = jax.random.randint(k0, (self.batch,), 0, self.vocab)
+
+            def gen(prev, kk):
+                kc, kn, ku = jax.random.split(kk, 3)
+                branch = jax.random.randint(kc, (self.batch,), 0,
+                                            succ_t.shape[1])
+                nxt = succ_t[prev, branch]
+                noisy = jax.random.uniform(kn, (self.batch,)) < self.noise
+                nxt = jnp.where(noisy, jax.random.randint(
+                    ku, (self.batch,), 0, self.vocab), nxt)
+                return nxt, nxt
+
+            _, rest = jax.lax.scan(gen, t0,
+                                   jax.random.split(kseq, self.seq_len - 1))
+            return jnp.concatenate([t0[None], rest], 0).T.astype(jnp.int32)
+
+        keys = jax.random.split(key, n * local_steps).reshape(n, local_steps)
+        return jax.vmap(lambda ks, m: jax.vmap(
+            lambda k: one_batch(k, m))(ks))(keys, self.mix)

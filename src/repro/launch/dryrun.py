@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs import (ASSIGNED, INPUT_SHAPES, LoRAConfig,
                            OptimizerConfig, config_for_shape, supports_shape)
-from repro.core.federated import make_fed_round_step
+from repro.core.federated import make_run_chunk
 from repro.core.lora import init_lora
 from repro.core.scaling import scaling_factor
 from repro.launch.mesh import make_production_mesh, num_clients
@@ -94,8 +94,10 @@ def _build(arch: str, shape_name: str, mesh, rank: int, alpha: float,
         n = num_clients(mesh)
         gamma = scaling_factor("sfedlora", alpha, rank, n)
         opt_cfg = OptimizerConfig(name="sgd", lr=5e-3)
-        step = make_fed_round_step(model, strategy="fedsa", opt_cfg=opt_cfg,
-                                   gamma=gamma, jit=False)
+        # the REAL trainer engine (core/federated.py run_chunk), lowered with
+        # explicit shardings — one scanned round per chunk for compile parity
+        step = make_run_chunk(model, strategy="fedsa", opt_cfg=opt_cfg,
+                              gamma=gamma, jit=False)
 
         def make_state():
             from repro.optim.optimizers import make_optimizer
@@ -110,15 +112,18 @@ def _build(arch: str, shape_name: str, mesh, rank: int, alpha: float,
 
         params_s, lora_s, opt_s = jax.eval_shape(make_state)
         batch = model.input_specs(shape, n_clients=n)
-        batch = {k: jax.ShapeDtypeStruct((v.shape[0], 1) + v.shape[1:],
+        # (chunk_rounds=1, N, local_steps=1, per-client batch, ...)
+        batch = {k: jax.ShapeDtypeStruct((1, v.shape[0], 1) + v.shape[1:],
                                          v.dtype) for k, v in batch.items()}
+        key_s = jax.eval_shape(lambda: jax.random.key(0))
         ridx = jax.ShapeDtypeStruct((), jnp.int32)
-        in_specs = (params_s, lora_s, opt_s, batch, ridx)
+        in_specs = (params_s, lora_s, opt_s, key_s, ridx, batch)
+        repl = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
         in_shard = (rules.params_sharding(params_s, mesh),
                     rules.lora_sharding(lora_s, mesh),
                     rules.lora_sharding(opt_s, mesh),
-                    rules.tree_specs(batch, mesh, _train_batch_spec),
-                    jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+                    repl, repl,
+                    rules.chunked_inputs_sharding(batch, mesh))
         return step, in_specs, in_shard
 
     if shape.kind == "prefill":
@@ -142,22 +147,6 @@ def _build(arch: str, shape_name: str, mesh, rank: int, alpha: float,
                 rules.inputs_sharding(spec["pos"], mesh))
     return (serve_step, (params_s, spec["cache"], spec["token"], spec["pos"]),
             in_shard)
-
-
-def _train_batch_spec(path, shape, mesh):
-    from jax.sharding import PartitionSpec as P
-    ba = rules.batch_axes(mesh)
-    spec = [None] * len(shape)
-    if ba and shape[0] % _prod(mesh, ba) == 0:
-        spec[0] = ba if len(ba) > 1 else ba[0]
-    return P(*spec)
-
-
-def _prod(mesh, axes):
-    p = 1
-    for a in axes:
-        p *= mesh.shape[a]
-    return p
 
 
 def _compile_stats(arch, shape_name, mesh, rank, alpha, *, num_layers=None,

@@ -28,6 +28,27 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def mesh_from_spec(spec: str):
+    """Build a mesh from a CLI spec string.
+
+    ``""``/``"none"`` -> no mesh;  ``"pod"``/``"multipod"`` -> the production
+    meshes;  ``"DxM"`` / ``"PxDxM"`` (e.g. ``"4x2"``, ``"2x16x16"``) ->
+    explicit shapes with axes ("data","model") / ("pod","data","model").
+    """
+    if not spec or spec == "none":
+        return None
+    if spec == "pod":
+        return make_production_mesh()
+    if spec == "multipod":
+        return make_production_mesh(multi_pod=True)
+    dims = tuple(int(d) for d in spec.split("x"))
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}.get(len(dims))
+    if axes is None:
+        raise ValueError(f"mesh spec '{spec}': expected 1-3 'x'-joined dims")
+    return jax.make_mesh(dims, axes)
+
+
 def client_axes(mesh) -> tuple:
     """Mesh axes that carry the federated client dimension."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -2,24 +2,23 @@
 
 CPU-scale (this container):
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
-      --rank 64 --scaling sfedlora --clients 4 --rounds 30
+      --rank 64 --scaling sfedlora --clients 4 --rounds 30 --chunk-rounds 10
 
-On a TPU mesh the same entry point builds the production mesh and shards the
-client dim over ("pod","data") — see launch/dryrun.py for the compile-only
-proof of that path.
+On a mesh the same entry point shards the client dim over the mesh's client
+axes ("pod","data") and runs the compiled scan engine:
+  ... --mesh 4x2 --clients 8 --chunk-rounds 10 --data-mode device
+(see launch/dryrun.py for the compile-only proof of the production meshes).
 """
 from __future__ import annotations
 
 import argparse
-import json
 
-import numpy as np
-
-from repro.checkpoint.io import save_federated_state
 from repro.configs import ARCHS, get_config
 from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
+from repro.core.aggregation import STRATEGIES
 from repro.core.federated import FederatedTrainer
 from repro.data.synthetic import FederatedDataset
+from repro.launch.mesh import mesh_from_spec
 from repro.models.api import build_model
 
 
@@ -32,11 +31,12 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=8.0)
     ap.add_argument("--scaling", default="sfedlora",
                     choices=("lora", "rslora", "sfedlora", "za", "zb"))
-    ap.add_argument("--strategy", default="fedsa",
-                    choices=("fedit", "ffa", "fedsa", "rolora"))
+    ap.add_argument("--strategy", default="fedsa", choices=STRATEGIES)
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per round")
     ap.add_argument("--optimizer", default="sgd", choices=("sgd", "adamw"))
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--seq", type=int, default=64)
@@ -44,7 +44,19 @@ def main(argv=None):
     ap.add_argument("--partition", default="iid",
                     choices=("iid", "dirichlet"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-rounds", type=int, default=0,
+                    help="rounds per compiled scan chunk (0: one chunk per "
+                         "log stride)")
+    ap.add_argument("--data-mode", default="host", choices=("host", "device"),
+                    help="host: stage dataset batches per chunk; device: "
+                         "synthesize batches inside the scan via jax.random")
+    ap.add_argument("--mesh", default="",
+                    help="mesh spec: 'DxM'/'PxDxM' (e.g. 4x2, 2x16x16), "
+                         "'pod', 'multipod'; empty = no mesh")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint to restore (incl. PRNG key + round, so "
+                         "the run continues bit-exactly)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -54,6 +66,7 @@ def main(argv=None):
     ds = FederatedDataset(cfg.vocab_size, args.clients, seq_len=args.seq,
                           batch_per_client=args.batch_per_client,
                           partition=args.partition, seed=args.seed)
+    mesh = mesh_from_spec(args.mesh)
     tr = FederatedTrainer(
         model, ds,
         lora_cfg=LoRAConfig(rank=args.rank, alpha=args.alpha,
@@ -62,18 +75,23 @@ def main(argv=None):
                                 local_steps=args.local_steps,
                                 rounds=args.rounds,
                                 aggregation=args.strategy,
-                                partition=args.partition),
+                                partition=args.partition,
+                                participation=args.participation),
         opt_cfg=OptimizerConfig(name=args.optimizer, lr=args.lr),
-        seed=args.seed)
+        seed=args.seed, data_mode=args.data_mode,
+        chunk_rounds=args.chunk_rounds, mesh=mesh)
+    if args.resume:
+        tr.restore(args.resume)
+        print(f"# resumed from {args.resume} at round {tr.round_idx}")
     print(f"# {args.arch}{' (reduced)' if args.reduced else ''}  "
           f"strategy={args.strategy} scaling={args.scaling} "
-          f"gamma={tr.gamma:.4f} rank={args.rank} N={args.clients}")
+          f"gamma={tr.gamma:.4f} rank={args.rank} N={args.clients}"
+          + (f" mesh={args.mesh}" if args.mesh else ""))
     tr.run(args.rounds, log_every=max(1, args.rounds // 10))
     ppl = tr.eval_perplexity()
     print(f"# final held-out perplexity: {ppl:.3f}")
     if args.save:
-        save_federated_state(args.save, tr.base, tr.lora, tr.opt_state,
-                             tr.round_idx)
+        tr.save(args.save)
         print(f"# saved -> {args.save}")
     return tr
 

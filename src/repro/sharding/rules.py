@@ -203,3 +203,19 @@ def inputs_sharding(batch, mesh, *, client_dim=False):
     return tree_specs(batch, mesh,
                       lambda p, s, m: input_spec(p, s, m,
                                                  client_dim=client_dim))
+
+
+def chunked_input_spec(path_keys, shape, mesh) -> P:
+    """Scan-staged training batches (chunk_rounds, N, steps, b, s): the
+    leading scan dim stays replicated, the client dim (dim 1) shards over
+    the client/batch axes when divisible."""
+    nd = len(shape)
+    spec = [None] * nd
+    ba = batch_axes(mesh)
+    if nd > 1 and ba and _div(shape[1], mesh, ba):
+        spec[1] = ba if len(ba) > 1 else ba[0]
+    return P(*spec)
+
+
+def chunked_inputs_sharding(batch, mesh):
+    return tree_specs(batch, mesh, chunked_input_spec)
