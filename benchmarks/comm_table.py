@@ -15,6 +15,9 @@ from repro.core.lora import init_lora
 from repro.models.api import build_model
 
 
+HET_RANKS = (8, 64, 512, 512)      # a mixed-rank federation (pad: r_max=512)
+
+
 def main(emit=print):
     cfg = get_config("llama2-7b")
     model = build_model(cfg)
@@ -29,6 +32,21 @@ def main(emit=print):
             # uploads both matrices for the stacked product)
             mb = get_strategy(strat).upload_bytes(lora_n, 0) / 1e6
             emit(f"comm,{strat},{rank},{mb:.2f}")
+    # heterogeneous clients: every client allocates the padded r_max but
+    # only uploads its own active rank rows/cols — low-rank clients pay a
+    # fraction of the padded volume
+    r_max = max(HET_RANKS)
+    if rank != r_max:        # reuse the homogeneous loop's last tree
+        lora1 = init_lora(zeros, jax.random.key(1), LoRAConfig(rank=r_max))
+    # accounting only reads per-client shapes — a length-1 client dim
+    # suffices (no need to materialize N copies of the r_max adapters)
+    lora_n = jax.tree.map(lambda x: x[None], lora1)
+    emit("bench,strategy,client,rank,active_upload_MB_per_round")
+    for strat in STRATEGIES:
+        per = get_strategy(strat).upload_bytes_per_client(
+            lora_n, 0, ranks=HET_RANKS)
+        for i, (r_i, bts) in enumerate(zip(HET_RANKS, per)):
+            emit(f"commhet,{strat},{i},{r_i},{bts / 1e6:.2f}")
 
 
 if __name__ == "__main__":

@@ -85,22 +85,30 @@ def run_method(method: str, *, rank: int, clients: int = 3, rounds: int = 30,
                local_steps: int = 5, lr: float = 1.0, alpha: float = 8.0,
                partition: str = "iid", optimizer: str = "sgd", seed: int = 0,
                model=None, base=None, targets=("q", "v"),
-               chunk_rounds: int = 0, data_mode: str = "host"):
+               chunk_rounds: int = 0, data_mode: str = "host",
+               ranks=None, dirichlet_alpha: float = 0.5,
+               weight_by_size: bool = False):
     """One federated fine-tuning run; returns the trainer (history inside).
-    With the default ``chunk_rounds=0`` the whole run is one compiled scan."""
+    With the default ``chunk_rounds=0`` the whole run is one compiled scan.
+    ``ranks`` (one per client) switches to the heterogeneous padded-rank
+    path with per-client gamma_i; ``weight_by_size`` weights the server
+    mean by the dataset's per-client example counts."""
     strategy, scaling = METHODS[method]
     if model is None:
         model, base = pretrained_base()
     # fine-tuning is a NEW task (fresh topic transition tables, seed offset)
     # — the paper fine-tunes a pretrained model on a downstream dataset.
     ds = FederatedDataset(VOCAB, clients, seq_len=SEQ, batch_per_client=4,
-                          partition=partition, seed=seed + 777)
+                          partition=partition,
+                          dirichlet_alpha=dirichlet_alpha, seed=seed + 777)
     tr = FederatedTrainer(
         model, ds,
-        lora_cfg=LoRAConfig(rank=rank, alpha=alpha, scaling=scaling,
-                            targets=targets),
+        lora_cfg=LoRAConfig(rank=rank, ranks=ranks, alpha=alpha,
+                            scaling=scaling, targets=targets),
         fed_cfg=FederatedConfig(num_clients=clients, local_steps=local_steps,
-                                aggregation=strategy, partition=partition),
+                                aggregation=strategy, partition=partition,
+                                dirichlet_alpha=dirichlet_alpha,
+                                weight_by_size=weight_by_size),
         opt_cfg=OptimizerConfig(name=optimizer, lr=lr),
         seed=seed, base_params=base, chunk_rounds=chunk_rounds,
         data_mode=data_mode)
@@ -114,6 +122,6 @@ def eval_top1(tr, batch: int = 32) -> float:
     toks = jnp.asarray(tr.dataset.eval_batch(batch))
     lora0 = jax.tree.map(lambda x: x[0], tr.lora)
     logits, _ = tr.model.forward(tr.base, {"tokens": toks}, lora=lora0,
-                                 gamma=tr.gamma)
+                                 gamma=tr.client_gamma(0))
     pred = jnp.argmax(logits[:, :-1], -1)
     return float((pred == toks[:, 1:]).mean())

@@ -6,6 +6,11 @@ Reduced scale: rank 256, N in {2, 4, 8}.  Each run executes as one compiled
 scan chunk; the rounds/sec column tracks the engine's steady-state
 throughput as N grows (timed on a second, jit-cached chunk of the same
 length — the accuracy columns come from the first chunk only).
+
+The heterogeneous sweep repeats the main methods with per-client ranks
+mixed across {r/4, r/2, r} (the regime FLoRA/ILoRA show breaks naive
+factor-averaging): padded-rank engine, per-client gamma_i, Dirichlet client
+sizes with size-weighted aggregation.
 """
 import time
 
@@ -15,7 +20,13 @@ from benchmarks.common import pretrained_base, run_method
 
 CLIENTS = (2, 4, 8)
 MAIN = ("RoLoRA", "FedSA-LoRA", "FedSA-rsLoRA", "SFed-LoRA")
+HET = ("SFed-LoRA", "FLoRA")
 RANK = 256
+
+
+def het_ranks(n: int, r_max: int = RANK):
+    """Mixed per-client ranks cycling r/4, r/2, r (always includes r_max)."""
+    return tuple(r_max // (4, 2, 1)[i % 3] for i in range(n - 1)) + (r_max,)
 
 
 def main(rounds: int = 25, emit=print):
@@ -33,6 +44,21 @@ def main(rounds: int = 25, emit=print):
             results[(method, n)] = final
             emit(f"fig4,{method},{n},{final:.4f},{np.exp(final):.3f},"
                  f"{rps:.2f}")
+    emit("bench,method,clients,ranks,final_loss,final_ppl,rounds_per_sec")
+    for method in HET:
+        for n in CLIENTS:
+            ranks = het_ranks(n)
+            tr = run_method(method, rank=RANK, ranks=ranks, clients=n,
+                            rounds=rounds, partition="dirichlet",
+                            weight_by_size=True, model=model, base=base,
+                            chunk_rounds=rounds)
+            final = np.mean([h["loss"] for h in tr.history[-5:]])
+            t0 = time.perf_counter()
+            tr.run(rounds)
+            rps = rounds / (time.perf_counter() - t0)
+            results[(method, n, ranks)] = final
+            emit(f"fig4het,{method},{n},{'|'.join(map(str, ranks))},"
+                 f"{final:.4f},{np.exp(final):.3f},{rps:.2f}")
     return results
 
 

@@ -1,0 +1,73 @@
+"""Heterogeneous federated clients end to end: per-client LoRA ranks (padded
+representation + rank mask), per-client scaling factors gamma_i =
+alpha*sqrt(N/r_i) (the paper's Theorem 4.2 applied per client), Dirichlet
+non-IID topic mixtures AND client example counts, and size-weighted
+aggregation.
+
+  PYTHONPATH=src python examples/heterogeneous_clients.py [--rounds 20]
+
+Equivalent CLI:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+      --clients 4 --ranks 4,8,16,16 --partition dirichlet --weight-by-size
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
+from repro.core.aggregation import get_strategy
+from repro.core.federated import FederatedTrainer
+from repro.data.synthetic import FederatedDataset
+from repro.models.api import build_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=20)
+ap.add_argument("--ranks", default="4,8,16,16",
+                help="comma-separated per-client ranks")
+ap.add_argument("--strategy", default="fedsa")
+args = ap.parse_args()
+ranks = tuple(int(r) for r in args.ranks.split(","))
+n = len(ranks)
+
+cfg = get_config("gemma-2b").reduced()
+model = build_model(cfg)
+ds = FederatedDataset(cfg.vocab_size, n, seq_len=64, batch_per_client=4,
+                      partition="dirichlet", dirichlet_alpha=0.3)
+tr = FederatedTrainer(
+    model, ds,
+    lora_cfg=LoRAConfig(ranks=ranks, alpha=8.0, scaling="sfedlora"),
+    fed_cfg=FederatedConfig(num_clients=n, local_steps=2,
+                            aggregation=args.strategy,
+                            partition="dirichlet", weight_by_size=True),
+    opt_cfg=OptimizerConfig(name="sgd", lr=0.1),
+    chunk_rounds=max(1, args.rounds // 4))
+
+print("client  rank  gamma_i = 8*sqrt(N/r_i)  examples  agg_weight")
+for i, r in enumerate(ranks):
+    print(f"{i:6d}  {r:4d}  {tr.gammas[i]:23.4f}  {ds.sizes[i]:8d}  "
+          f"{ds.size_weights[i]:10.3f}")
+
+per_client = get_strategy(args.strategy).upload_bytes_per_client(
+    tr.lora, 0, ranks=ranks)
+print("per-client active-rank upload bytes:",
+      ", ".join(f"{b/1e3:.1f}kB" for b in per_client))
+
+tr.run(args.rounds, log_every=max(1, args.rounds // 5))
+
+# the padded representation's invariant: client i's rank rows beyond r_i
+# stay exactly zero through training and aggregation
+q = tr.lora["stack"]["repeat"]["p0"]["attn"]["q"]
+for i, r in enumerate(ranks):
+    a_i, b_i = np.asarray(q["a"][i]), np.asarray(q["b"][i])
+    assert np.all(a_i[..., r:, :] == 0) and np.all(b_i[..., :, r:] == 0)
+print("masked rank rows/cols exactly zero for every client")
+
+for c in range(n):
+    print(f"client {c} (r={ranks[c]}, gamma={tr.client_gamma(c):.3f}) "
+          f"held-out ppl: {tr.eval_perplexity(client=c):.3f}")

@@ -51,13 +51,19 @@ def _unlistify(node):
 
 
 def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
-                         *, key=None, data_state: str = None):
+                         *, key=None, data_state: str = None,
+                         rank_mask=None, partition_state: str = None):
     """Checkpoint one federated run.
 
     ``key`` (the trainer's carried JAX PRNG key) and ``data_state`` (the host
     dataset's serialized RNG stream state) make chunked runs resume
     bit-exactly: the restored engine continues the identical random stream
     from ``round_idx``.
+
+    ``rank_mask`` ((N, r_max), heterogeneous per-client ranks) and
+    ``partition_state`` (the dataset's serialized client partition — topic
+    mixtures + per-client example counts) round-trip the heterogeneity
+    config, so a restored run can verify it resumes under the same clients.
     """
     tree = {"base": base, "lora": lora, "opt": opt_state,
             "round": np.asarray(round_idx)}
@@ -65,13 +71,18 @@ def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
         tree["prng_key"] = np.asarray(jax.random.key_data(key))
     if data_state is not None:
         tree["data_state"] = np.asarray(data_state)
+    if rank_mask is not None:
+        tree["rank_mask"] = np.asarray(rank_mask)
+    if partition_state is not None:
+        tree["partition_state"] = np.asarray(partition_state)
     save_pytree(path, tree)
 
 
 def load_federated_state(path: str, *, full: bool = False):
     """Returns (base, lora, opt, round) — or, with ``full=True``,
-    (base, lora, opt, round, key, data_state) where the trailing two are
-    None for checkpoints written without them."""
+    (base, lora, opt, round, key, data_state, extras): key/data_state are
+    None for checkpoints written without them, and ``extras`` is a dict
+    holding "rank_mask" / "partition_state" when present."""
     t = load_pytree(path)
     out = (t["base"], t["lora"], t.get("opt", {}), int(t["round"]))
     if not full:
@@ -82,4 +93,9 @@ def load_federated_state(path: str, *, full: bool = False):
     data_state = None
     if "data_state" in t:
         data_state = str(np.asarray(t["data_state"]))
-    return out + (key, data_state)
+    extras = {}
+    if "rank_mask" in t:
+        extras["rank_mask"] = np.asarray(t["rank_mask"])
+    if "partition_state" in t:
+        extras["partition_state"] = str(np.asarray(t["partition_state"]))
+    return out + (key, data_state, extras)

@@ -136,6 +136,10 @@ class LoRAConfig:
     scaling: str = "sfedlora"      # lora | rslora | sfedlora | za | zb
     targets: Tuple[str, ...] = ("q", "v")
     init_std: float = 0.02
+    # heterogeneous clients: one rank per client (len == num_clients);
+    # overrides `rank` — all clients pad to max(ranks) with a rank mask and
+    # train with their own gamma_i = scaling(alpha, r_i, N)
+    ranks: Optional[Tuple[int, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +151,9 @@ class FederatedConfig:
     partition: str = "iid"         # iid | dirichlet
     dirichlet_alpha: float = 0.5
     participation: float = 1.0     # fraction of clients sampled per round
+    # weight the server aggregate by per-client example counts
+    # (dataset.size_weights) instead of a plain client mean
+    weight_by_size: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

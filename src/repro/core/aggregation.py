@@ -36,6 +36,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# the canonical adapter-tree walker and rank-mask broadcaster live with the
+# LoRA tree utilities; re-exported here under the names this module always
+# used (tests and callers import aggregation._map_ab)
+from repro.core.lora import _walk_ab as _map_ab
+from repro.core.lora import rank_leaf_mask as _rank_weight
 
 
 def negate_flag(flag):
@@ -43,22 +50,6 @@ def negate_flag(flag):
     traced / 0-d device bools (``not`` would raise on tracers)."""
     out = jnp.logical_not(flag)
     return out if isinstance(flag, jax.Array) else bool(out)
-
-
-def _map_ab(tree, fn_a, fn_b):
-    """Apply fn_a to 'a' leaves and fn_b to 'b' leaves of a LoRA tree."""
-    def walk(node):
-        if isinstance(node, dict):
-            if set(node) <= {"a", "b"} and node:
-                out = {}
-                if "a" in node:
-                    out["a"] = fn_a(node["a"])
-                if "b" in node:
-                    out["b"] = fn_b(node["b"])
-                return out
-            return {k: walk(v) for k, v in node.items()}
-        return node
-    return walk(tree)
 
 
 def _map_ab_pairs(tree, fn_pair):
@@ -89,24 +80,42 @@ def mask_grads(grads, train_a, train_b):
 
 
 def aggregate_clients(lora_stacked, agg_a, agg_b, *, axis: int = 0,
-                      weights=None):
+                      weights=None, rank_mask=None):
     """Server step: replace selected leaves by their (optionally weighted)
     client mean, broadcast back to every client (flags may be traced).
 
-    ``weights`` (N,) supports partial participation: non-participants get
-    weight 0 in the mean but still receive the broadcast aggregate."""
-    def agg(flag):
+    ``weights`` (N,) supports partial participation and size-weighted
+    aggregation: weight-0 clients are excluded from the mean but still
+    receive the broadcast aggregate.
+
+    ``rank_mask`` (N, r) supports heterogeneous per-client ranks in the
+    padded representation: each rank row is averaged only over the clients
+    whose mask is 1 there, and each client receives the aggregate re-masked
+    to its own active rows, so inactive rows stay exactly zero.  Rank rows
+    whose total weight is zero (no active client sampled this round) keep
+    their previous per-client values instead of collapsing to 0."""
+    def agg(flag, which):
         def f(x):
-            if weights is None:
-                mean = x.mean(axis=axis, keepdims=True)
-            else:
-                w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
-                mean = (x * w).sum(axis=axis, keepdims=True) / jnp.maximum(
-                    w.sum(), 1e-9)
+            if weights is None and rank_mask is None:
+                mean = jnp.broadcast_to(x.mean(axis=axis, keepdims=True),
+                                        x.shape)
+                return jnp.where(jnp.asarray(flag, bool), mean, x)
+            w = jnp.ones((1,) * x.ndim, x.dtype)
+            if weights is not None:
+                w = w * weights.reshape(
+                    (-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+            if rank_mask is not None:
+                w = w * _rank_weight(rank_mask, x, which)
+            den = w.sum(axis=axis, keepdims=True)
+            mean = (x * w).sum(axis=axis, keepdims=True) / jnp.maximum(
+                den, 1e-9)
             mean = jnp.broadcast_to(mean, x.shape)
-            return jnp.where(jnp.asarray(flag, bool), mean, x)
+            if rank_mask is not None:
+                mean = mean * _rank_weight(rank_mask, x, which)
+            keep = jnp.asarray(flag, bool) & (den > 0)
+            return jnp.where(keep, mean, x)
         return f
-    return _map_ab(lora_stacked, agg(agg_a), agg(agg_b))
+    return _map_ab(lora_stacked, agg(agg_a, "a"), agg(agg_b, "b"))
 
 
 def _concrete_flag(flag, name: str) -> bool:
@@ -163,14 +172,47 @@ class Strategy:
         ta, tb = self.train_flags(round_idx)
         return mask_grads(grads, ta, tb)
 
-    def aggregate(self, lora_stacked, round_idx, *, weights=None):
+    def aggregate(self, lora_stacked, round_idx, *, weights=None,
+                  rank_mask=None):
         aa, ab = self.agg_flags(round_idx)
-        return aggregate_clients(lora_stacked, aa, ab, weights=weights)
+        return aggregate_clients(lora_stacked, aa, ab, weights=weights,
+                                 rank_mask=rank_mask)
 
     def upload_bytes(self, lora_stacked, round_idx: int = 0) -> int:
         """Per-round client->server bytes (host-only; concrete round_idx)."""
         aa, ab = self.agg_flags(round_idx)
         return upload_bytes(lora_stacked, aa, ab)
+
+    def upload_bytes_per_client(self, lora_stacked, round_idx: int = 0, *,
+                                ranks):
+        """(N,) per-client upload bytes counting only ACTIVE parameters.
+
+        Heterogeneous clients in the padded representation carry r_max-
+        shaped adapters but only transmit their own r_i active rank rows of
+        A / columns of B; ``ranks`` is the per-client rank list.  Host-only
+        accounting, like :meth:`upload_bytes` (which it reproduces when all
+        ranks equal the padded rank)."""
+        aa, ab = self.agg_flags(round_idx)
+        aa = _concrete_flag(aa, "agg_a")
+        ab = _concrete_flag(ab, "agg_b")
+        ranks = np.asarray([int(r) for r in ranks], np.int64)
+        totals = np.zeros(len(ranks), np.int64)
+
+        def count(flag, which):
+            def f(x):
+                nonlocal totals
+                if flag:
+                    r_pad = x.shape[-2] if which == "a" else x.shape[-1]
+                    if (ranks > r_pad).any():
+                        raise ValueError(
+                            f"rank {int(ranks.max())} exceeds the padded "
+                            f"adapter rank {r_pad}")
+                    per_rank_row = x[0].size // r_pad * x.dtype.itemsize
+                    totals = totals + per_rank_row * ranks
+                return x
+            return f
+        _map_ab(lora_stacked, count(aa, "a"), count(ab, "b"))
+        return totals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,9 +253,18 @@ class StackingStrategy(Strategy):
     (weighted) mean update is then redistributed as a rank-r factorization
     (truncated SVD) so every client continues from identical adapters of the
     original shape, without touching the frozen base weights.
+
+    Heterogeneous ranks (``rank_mask`` given, padded representation): each
+    client's inactive rank rows are exactly zero, so the stacked product is
+    automatically the sum of the TRUE rank-r_i products — concatenating the
+    active ranks costs nothing extra.  The redistribution step re-masks the
+    SVD factors per client: the components are ordered by singular value,
+    so client i keeps the top-r_i components — the best rank-r_i
+    approximation of the mean update at that client's own rank.
     """
 
-    def aggregate(self, lora_stacked, round_idx, *, weights=None):
+    def aggregate(self, lora_stacked, round_idx, *, weights=None,
+                  rank_mask=None):
         def redistribute(node):
             a, b = node["a"], node["b"]          # (N,...,r,di), (N,...,do,r)
             n, r = a.shape[0], a.shape[-2]
@@ -240,7 +291,11 @@ class StackingStrategy(Strategy):
                 b_new = jnp.pad(b_new, pad)
             tile = lambda x, like: jnp.broadcast_to(
                 x[None], (n,) + x.shape).astype(like.dtype)
-            return {"a": tile(a_new, a), "b": tile(b_new, b)}
+            out = {"a": tile(a_new, a), "b": tile(b_new, b)}
+            if rank_mask is not None:
+                out["a"] = out["a"] * _rank_weight(rank_mask, out["a"], "a")
+                out["b"] = out["b"] * _rank_weight(rank_mask, out["b"], "b")
+            return out
         return _map_ab_pairs(lora_stacked, redistribute)
 
 

@@ -36,6 +36,7 @@ is sqrt(N/r), tied to the *distribution config*, not just the adapter shape.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
 
 import jax
@@ -43,8 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import get_strategy
-from repro.core.lora import init_lora
-from repro.core.scaling import scaling_factor
+from repro.core.lora import (apply_rank_mask, init_lora, mask_rank_tree,
+                             rank_mask, scale_lora_b)
+from repro.core.scaling import per_client_gammas, scaling_factor
 from repro.optim.optimizers import apply_updates, global_norm, make_optimizer
 
 
@@ -55,23 +57,48 @@ def participation_weights(key, num_clients: int, num_sampled: int):
     return jnp.zeros((num_clients,), jnp.float32).at[perm[:num_sampled]].set(1.0)
 
 
-def make_round_body(model, *, strategy, opt_cfg, gamma: float):
+def make_round_body(model, *, strategy, opt_cfg, gamma, rank_mask=None):
     """Returns round_body(base, lora_N, opt_N, batches, round_idx, weights).
 
     ``lora_N``/``opt_N`` have a leading client dim; ``batches`` leaves are
     (N, local_steps, batch, ...).  Returns (lora_N, opt_N, metrics).
+
+    ``gamma`` is a python float (homogeneous) or a length-N sequence of
+    per-client scaling factors gamma_i = scaling(alpha, r_i, N).  Uniform
+    sequences collapse to the static-float path, which is bit-identical to
+    the homogeneous engine; truly mixed gammas are folded into each
+    client's B matrix inside the loss (y = xW + (xA^T)(gamma_i B)^T), so
+    the gamma reaching the kernels stays a static 1.0 — required by the
+    fused Pallas tier, which bakes gamma in at trace time.
+
+    ``rank_mask`` (N, r_max) enables heterogeneous per-client ranks in the
+    padded representation: client gradients are masked to the active rank
+    rows and the server aggregate is rank-aware (see ``core/aggregation``).
     """
     strat = get_strategy(strategy)
     _, opt_update = make_optimizer(opt_cfg)
+    if not isinstance(gamma, (int, float)):
+        gs = [float(g) for g in gamma]
+        gamma = gs[0] if all(g == gs[0] for g in gs) \
+            else jnp.asarray(gs, jnp.float32)
+    gamma_N = gamma if isinstance(gamma, jax.Array) else None
+    mask_N = None if rank_mask is None else jnp.asarray(rank_mask,
+                                                        jnp.float32)
 
-    def client_local(base, lora, opt_state, batches, round_idx):
+    def client_local(base, lora, opt_state, batches, round_idx, mask_row,
+                     gamma_i):
         def step(carry, batch):
             lo, st = carry
             def loss_fn(l):
-                return model.loss(base, batch, lora=l, gamma=gamma)
+                if gamma_i is None:
+                    return model.loss(base, batch, lora=l, gamma=gamma)
+                return model.loss(base, batch,
+                                  lora=scale_lora_b(l, gamma_i), gamma=1.0)
             (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(lo)
             gnorm = global_norm(grads)
             grads = strat.mask_grads(grads, round_idx)
+            if mask_row is not None:
+                grads = mask_rank_tree(grads, mask_row)
             if opt_cfg.grad_clip:
                 from repro.optim.optimizers import clip_by_global_norm
                 grads = clip_by_global_norm(grads, opt_cfg.grad_clip)
@@ -83,12 +110,15 @@ def make_round_body(model, *, strategy, opt_cfg, gamma: float):
         return lora, opt_state, ms
 
     def round_body(base, lora_N, opt_N, batches, round_idx, weights=None):
-        """``weights`` (N,) in {0,1}: partial participation — non-sampled
-        clients keep their previous local state and only receive the
-        aggregate."""
+        """``weights`` (N,) non-negative: 0 = non-sampled (keeps its local
+        state, only receives the aggregate); positive values additionally
+        weight the server mean (e.g. by client example counts)."""
         new_lora, new_opt, ms = jax.vmap(
-            client_local, in_axes=(None, 0, 0, 0, None))(
-                base, lora_N, opt_N, batches, round_idx)
+            client_local,
+            in_axes=(None, 0, 0, 0, None,
+                     None if mask_N is None else 0,
+                     None if gamma_N is None else 0))(
+                base, lora_N, opt_N, batches, round_idx, mask_N, gamma_N)
         if weights is not None:
             sel = lambda new, old: jax.tree.map(
                 lambda a, b: jnp.where(
@@ -96,15 +126,17 @@ def make_round_body(model, *, strategy, opt_cfg, gamma: float):
                 new, old)
             new_lora = sel(new_lora, lora_N)
             new_opt = sel(new_opt, opt_N)
-        new_lora = strat.aggregate(new_lora, round_idx, weights=weights)
+        new_lora = strat.aggregate(new_lora, round_idx, weights=weights,
+                                  rank_mask=mask_N)
         metrics = {"loss": ms["loss"].mean(), "grad_norm": ms["grad_norm"].mean()}
         return new_lora, new_opt, metrics
 
     return round_body
 
 
-def make_fed_round_step(model, *, strategy, opt_cfg, gamma: float,
-                        donate: bool = True, jit: bool = True):
+def make_fed_round_step(model, *, strategy, opt_cfg, gamma,
+                        rank_mask=None, donate: bool = True,
+                        jit: bool = True):
     """Single-round entry point (back-compat shim over the round body).
 
     Returns round_step(base, lora_N, opt_N, batches, round_idx, weights).
@@ -112,14 +144,15 @@ def make_fed_round_step(model, *, strategy, opt_cfg, gamma: float,
     in their own pjit with explicit shardings).
     """
     round_step = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
-                                 gamma=gamma)
+                                 gamma=gamma, rank_mask=rank_mask)
     if not jit:
         return round_step
     return jax.jit(round_step, donate_argnums=(1, 2) if donate else ())
 
 
-def make_run_chunk(model, *, strategy, opt_cfg, gamma: float,
+def make_run_chunk(model, *, strategy, opt_cfg, gamma,
                    participation: float = 1.0, batch_fn=None,
+                   rank_mask=None, client_weights=None,
                    donate: bool = True, jit: bool = True):
     """Build the chunked scan executor.
 
@@ -139,10 +172,16 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma: float,
                     ``num_rounds`` sets the chunk length.
       - metrics come back stacked: {"loss": (num_rounds,), ...}.
 
+    ``client_weights`` (N,) are static per-client aggregation weights
+    (e.g. example counts for size-weighted FedAvg); they compose with the
+    sampled participation mask inside the scan.
+
     ``lora_N``/``opt_N``/``key`` are donated when ``jit`` and ``donate``.
     """
     round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
-                                 gamma=gamma)
+                                 gamma=gamma, rank_mask=rank_mask)
+    size_w = None if client_weights is None else jnp.asarray(
+        client_weights, jnp.float32)
 
     def run_chunk(base, lora_N, opt_N, key, round0, batches=None,
                   num_rounds=None):
@@ -162,6 +201,8 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma: float,
             if participation < 1.0:
                 weights = participation_weights(k_sample, num_clients,
                                                 num_sampled)
+            if size_w is not None:
+                weights = size_w if weights is None else weights * size_w
             lora_c, opt_c, metrics = round_body(base, lora_c, opt_c, b,
                                                 round_idx, weights)
             return (lora_c, opt_c, k), metrics
@@ -204,6 +245,16 @@ class FederatedTrainer:
     ``mesh``: when given, base params are tensor-sharded and the client dim of
     LoRA/optimizer state shards over the mesh's client axes ("pod"/"data")
     per ``sharding/rules.py``.
+
+    Heterogeneous clients: ``lora_cfg.ranks`` (one rank per client) switches
+    to the padded-rank representation — every client allocates
+    r_max = max(ranks), a per-client rank mask keeps the extra rows inert
+    (zero-init, grad-masked, excluded from and re-masked after aggregation),
+    and each client trains/serves with its own gamma_i = scaling(alpha, r_i,
+    N).  ``fed_cfg.weight_by_size`` additionally weights the server mean by
+    the dataset's per-client example counts (``dataset.size_weights``).
+    With all ranks equal this path is bit-identical to the homogeneous
+    engine (tests/test_conformance.py).
     """
 
     def __init__(self, model, dataset, *, lora_cfg, fed_cfg, opt_cfg,
@@ -212,14 +263,37 @@ class FederatedTrainer:
         self.model = model
         self.dataset = dataset
         self.fed_cfg = fed_cfg
-        self.lora_cfg = lora_cfg
         self.opt_cfg = opt_cfg
         self.data_mode = data_mode
         self.chunk_rounds = chunk_rounds
         self.mesh = mesh
         n = fed_cfg.num_clients
-        self.gamma = scaling_factor(lora_cfg.scaling, lora_cfg.alpha,
-                                    lora_cfg.rank, n)
+        ranks = lora_cfg.ranks
+        if ranks is not None:
+            # heterogeneous per-client ranks: padded representation at
+            # r_max with a per-client rank mask (see core/lora.py)
+            ranks = tuple(int(r) for r in ranks)
+            if len(ranks) != n:
+                raise ValueError(
+                    f"lora_cfg.ranks has {len(ranks)} entries but "
+                    f"num_clients={n}")
+            self.ranks = ranks
+            self.rank_mask = rank_mask(ranks)
+            self.gammas = per_client_gammas(lora_cfg.scaling, lora_cfg.alpha,
+                                            ranks, n)
+            # uniform gamma stays a concrete float (and the engine's static
+            # fast path); truly mixed gammas have no single value
+            self.gamma = (self.gammas[0]
+                          if len(set(self.gammas)) == 1 else None)
+            lora_cfg = dataclasses.replace(lora_cfg, rank=max(ranks))
+        else:
+            self.ranks = None
+            self.rank_mask = None
+            self.gamma = scaling_factor(lora_cfg.scaling, lora_cfg.alpha,
+                                        lora_cfg.rank, n)
+            self.gammas = (self.gamma,) * n
+        self.lora_cfg = lora_cfg      # reflects the padded rank when het
+        engine_gamma = self.gammas if ranks is not None else self.gamma
         key = jax.random.key(seed)
         kb, kl = jax.random.split(key)
         self.base = base_params if base_params is not None else model.init(kb)
@@ -228,24 +302,29 @@ class FederatedTrainer:
         # FedSA init: all clients start from the SAME A (and B=0)
         self.lora = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), lora1)
+        if self.rank_mask is not None:
+            # client i's rows r_i..r_max of A start (and stay) exactly zero
+            self.lora = apply_rank_mask(self.lora, self.rank_mask)
         opt_init, _ = make_optimizer(opt_cfg)
         opt1 = opt_init(lora1)
         self.opt_state = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), opt1)
+        self.client_weights = None
+        if fed_cfg.weight_by_size:
+            if not hasattr(dataset, "size_weights"):
+                raise ValueError(
+                    "fed_cfg.weight_by_size needs a dataset exposing "
+                    "size_weights (per-client example counts)")
+            self.client_weights = jnp.asarray(dataset.size_weights,
+                                              jnp.float32)
+        self._engine_gamma = engine_gamma
 
-        batch_fn = None
         if data_mode == "device":
             from repro.data.synthetic import DeviceFederatedData
             self.device_data = DeviceFederatedData.from_host(dataset)
-            local_steps = fed_cfg.local_steps
-            batch_fn = lambda k, ridx: {
-                "tokens": self.device_data.sample_round(k, local_steps)}
         elif data_mode != "host":
             raise ValueError(f"unknown data_mode '{data_mode}'")
-        self._run_chunk = make_run_chunk(
-            model, strategy=fed_cfg.aggregation, opt_cfg=opt_cfg,
-            gamma=self.gamma, participation=fed_cfg.participation,
-            batch_fn=batch_fn, donate=True)
+        self._build_engine()
         # all round-level randomness (participation sampling, device-side
         # data) flows from this carried JAX key — no separate host RNG
         self._key = jax.random.key(seed + 31337)
@@ -258,6 +337,25 @@ class FederatedTrainer:
         # time, so it cannot be a traced argument)
         self._eval_loss = jax.jit(model.loss, static_argnames=("gamma",))
 
+    def _build_engine(self):
+        """(Re)build the compiled chunk executor from the current config,
+        rank mask, size weights, and (device mode) data tables.  ``restore``
+        calls this again when the checkpointed data partition differs from
+        the constructed one — the old executor's baked-in weights/tables
+        would otherwise silently go stale."""
+        batch_fn = None
+        if self.data_mode == "device":
+            device_data = self.device_data
+            local_steps = self.fed_cfg.local_steps
+            batch_fn = lambda k, ridx: {
+                "tokens": device_data.sample_round(k, local_steps)}
+        self._run_chunk = make_run_chunk(
+            self.model, strategy=self.fed_cfg.aggregation,
+            opt_cfg=self.opt_cfg, gamma=self._engine_gamma,
+            participation=self.fed_cfg.participation, batch_fn=batch_fn,
+            rank_mask=self.rank_mask, client_weights=self.client_weights,
+            donate=True)
+
     @functools.cached_property
     def round_step(self):
         """Single-round entry over externally supplied batches (callers with
@@ -266,7 +364,8 @@ class FederatedTrainer:
         Compiled lazily — the engine itself runs through ``run_chunk``."""
         return make_fed_round_step(
             self.model, strategy=self.fed_cfg.aggregation,
-            opt_cfg=self.opt_cfg, gamma=self.gamma, donate=False)
+            opt_cfg=self.opt_cfg, gamma=self._engine_gamma,
+            rank_mask=self.rank_mask, donate=False)
 
     # ------------------------------------------------------------- sharding
 
@@ -341,31 +440,68 @@ class FederatedTrainer:
             done += chunk
         return self.history
 
+    def client_gamma(self, client: int) -> float:
+        """The scaling factor client ``client`` trains and serves with
+        (gamma_i = scaling(alpha, r_i, N) under heterogeneous ranks)."""
+        return self.gammas[client]
+
     def eval_perplexity(self, batch: int = 16, client: int = 0) -> float:
         """Held-out perplexity using client ``client``'s personalized model."""
         toks = jnp.asarray(self.dataset.eval_batch(batch))
         lora_i = jax.tree.map(lambda x: x[client], self.lora)
         loss, _ = self._eval_loss(self.base, {"tokens": toks}, lora=lora_i,
-                                  gamma=self.gamma)
+                                  gamma=self.client_gamma(client))
         return float(jnp.exp(loss))
 
     # ----------------------------------------------------------- checkpoint
 
     def save(self, path: str) -> None:
         """Checkpoint state + round index + PRNG key (+ the host dataset's
-        RNG stream state) so a restored run continues bit-exactly."""
+        RNG stream state, the per-client rank mask, and the data-partition
+        state) so a restored run continues bit-exactly."""
         from repro.checkpoint.io import save_federated_state
         data_state = None
         if self.data_mode == "host" and hasattr(self.dataset, "rng_state"):
             data_state = self.dataset.rng_state()
+        partition_state = None
+        if hasattr(self.dataset, "partition_state"):
+            partition_state = self.dataset.partition_state()
         save_federated_state(path, self.base, self.lora, self.opt_state,
                              self.round_idx, key=self._key,
-                             data_state=data_state)
+                             data_state=data_state,
+                             rank_mask=self.rank_mask,
+                             partition_state=partition_state)
 
     def restore(self, path: str) -> None:
         from repro.checkpoint.io import load_federated_state
-        base, lora, opt, rnd, key, data_state = load_federated_state(
+        base, lora, opt, rnd, key, data_state, extras = load_federated_state(
             path, full=True)
+        ck_mask = extras.get("rank_mask")
+        if (ck_mask is None) != (self.rank_mask is None) or (
+                ck_mask is not None and not np.array_equal(
+                    np.asarray(ck_mask), np.asarray(self.rank_mask))):
+            raise ValueError(
+                "checkpoint per-client rank mask does not match this "
+                "trainer's configured ranks — restore with the same "
+                "lora_cfg.ranks the run was saved with")
+        if "partition_state" in extras and hasattr(self.dataset,
+                                                   "set_partition_state"):
+            unchanged = (hasattr(self.dataset, "partition_state") and
+                         self.dataset.partition_state()
+                         == extras["partition_state"])
+            self.dataset.set_partition_state(extras["partition_state"])
+            if not unchanged:
+                # the compiled engine baked in the constructed partition's
+                # size weights / device data tables — rebuild it so the
+                # resumed run aggregates under the CHECKPOINTED partition
+                if self.data_mode == "device":
+                    from repro.data.synthetic import DeviceFederatedData
+                    self.device_data = DeviceFederatedData.from_host(
+                        self.dataset)
+                if self.client_weights is not None:
+                    self.client_weights = jnp.asarray(
+                        self.dataset.size_weights, jnp.float32)
+                self._build_engine()
         self.base, self.lora, self.opt_state = base, lora, opt
         self.round_idx = rnd
         # drop history entries from beyond the restored round so consumers

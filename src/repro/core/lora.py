@@ -95,6 +95,88 @@ def num_lora_params(lora) -> int:
     return sum(x.size for x in jax.tree.leaves(lora))
 
 
+# ------------------------------------------------------- heterogeneous ranks
+#
+# Heterogeneous per-client ranks use a PADDED representation: every client
+# allocates rank r_max = max(ranks) so the client-stacked trees, the
+# lax.scan engine, and the mesh sharding of the client dim all keep one
+# uniform shape — client i's rows r_i..r_max of A (and columns of B) are
+# inert: zero at init, gradient-masked during local steps, re-masked after
+# every server aggregate, and excluded from aggregation means.
+
+def rank_mask(ranks, r_max: int = 0):
+    """(N, r_max) float32 mask: row i is r_i ones then r_max - r_i zeros."""
+    ranks = tuple(int(r) for r in ranks)
+    if not ranks or any(r < 1 for r in ranks):
+        raise ValueError(f"per-client ranks must all be >= 1, got {ranks}")
+    r_max = r_max or max(ranks)
+    if max(ranks) > r_max:
+        raise ValueError(f"rank {max(ranks)} exceeds padded r_max={r_max}")
+    return (jnp.arange(r_max)[None, :]
+            < jnp.asarray(ranks)[:, None]).astype(jnp.float32)
+
+
+def _walk_ab(tree, fn_a, fn_b):
+    """Apply fn_a / fn_b to the a / b leaves of every adapter node (the one
+    canonical adapter-tree walker — ``core/aggregation`` imports it as
+    ``_map_ab``).  Nodes holding only one of the two matrices (e.g. the
+    output of :func:`split_ab`) are tolerated."""
+    def walk(node):
+        if isinstance(node, dict):
+            if node and set(node) <= {"a", "b"}:
+                out = {}
+                if "a" in node:
+                    out["a"] = fn_a(node["a"])
+                if "b" in node:
+                    out["b"] = fn_b(node["b"])
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(tree)
+
+
+def rank_leaf_mask(mask, x, which: str):
+    """Broadcast a (N, r) rank mask against a client-stacked adapter leaf:
+    the rank dim is axis -2 on 'a' leaves ((N, ..., r, d_in)) and axis -1
+    on 'b' leaves ((N, ..., d_out, r))."""
+    n, r = mask.shape
+    if which == "a":
+        shape = (n,) + (1,) * (x.ndim - 3) + (r, 1)
+    else:
+        shape = (n,) + (1,) * (x.ndim - 2) + (r,)
+    return mask.reshape(shape).astype(x.dtype)
+
+
+def apply_rank_mask(lora_stacked, mask):
+    """Zero the inactive rank rows of A / columns of B per client.
+
+    ``lora_stacked`` has a leading client dim on every leaf
+    (a: (N, ..., r, d_in), b: (N, ..., d_out, r)); ``mask`` is (N, r).
+    """
+    fa = lambda x: x * rank_leaf_mask(mask, x, "a")
+    fb = lambda x: x * rank_leaf_mask(mask, x, "b")
+    return _walk_ab(lora_stacked, fa, fb)
+
+
+def mask_rank_tree(lora, mask_row):
+    """Single-client version of :func:`apply_rank_mask` (``mask_row`` (r,)
+    — typically a traced row under the engine's vmap over clients): zeroes
+    rank rows of A / columns of B, e.g. for per-client gradient masking."""
+    fa = lambda x: x * mask_row[..., :, None].astype(x.dtype)
+    fb = lambda x: x * mask_row.astype(x.dtype)
+    return _walk_ab(lora, fa, fb)
+
+
+def scale_lora_b(lora, scale):
+    """Scale every B matrix by ``scale`` (may be traced).
+
+    Folding a per-client gamma_i into B — y = xW + 1.0 * (x A^T)(gamma B)^T
+    — is mathematically identical to gamma * B A and keeps the gamma passed
+    to the kernels a static 1.0, which the fused Pallas tier requires."""
+    fb = lambda x: x * jnp.asarray(scale, x.dtype)
+    return _walk_ab(lora, lambda a: a, fb)
+
+
 def split_ab(lora):
     """Split a LoRA tree into (A-only tree, B-only tree) with the same
     structure — used by the selective-aggregation strategies.  Nodes holding

@@ -49,11 +49,37 @@ SCALINGS = {
 
 
 def scaling_factor(name: str, alpha: float, r: int, n_clients: int) -> float:
-    """The adapter scale gamma for a given scheme."""
+    """The adapter scale gamma for a given scheme.
+
+    ``r`` and ``n_clients`` must be >= 1: every scheme divides by r or
+    sqrt(r), and sqrt(N/r) of a non-positive client count is meaningless
+    (gamma would silently come out 0, inf, or nan and poison the run).
+    """
+    if r < 1:
+        raise ValueError(
+            f"scaling_factor needs rank r >= 1, got r={r} (every gamma "
+            "scheme divides by r or sqrt(r))")
+    if n_clients < 1:
+        raise ValueError(
+            f"scaling_factor needs n_clients >= 1, got n_clients="
+            f"{n_clients} (gamma = alpha*sqrt(N/r) degenerates at N <= 0)")
     try:
         return SCALINGS[name](alpha, r, n_clients)
     except KeyError:
         raise ValueError(f"unknown scaling '{name}'; options {list(SCALINGS)}")
+
+
+def per_client_gammas(name: str, alpha: float, ranks, n_clients: int):
+    """Per-client scaling factors for heterogeneous ranks.
+
+    With per-client ranks r_i the paper's Theorem 4.2 scaling becomes
+    gamma_i = alpha * sqrt(N / r_i): N is still the federation size (the
+    aggregation averages over all N clients), while the rank in the
+    denominator is the client's own adapter rank.  Uniform ranks collapse
+    to the homogeneous scaling_factor for every scheme.
+    """
+    return tuple(scaling_factor(name, alpha, int(r), n_clients)
+                 for r in ranks)
 
 
 def predicted_moment_scale(gamma: float, r: int, n_clients: int) -> float:

@@ -52,23 +52,64 @@ def client_topic_mixtures(num_clients: int, num_topics: int, *,
     raise ValueError(partition)
 
 
+def client_example_counts(num_clients: int, *, total: int = 0,
+                          partition: str = "iid",
+                          dirichlet_alpha: float = 0.5, seed: int = 0):
+    """Per-client example counts n_i (each >= 1, summing to ``total``).
+
+    IID splits the pool evenly; the Dirichlet partition draws client
+    proportions ~ Dir(alpha) — small alpha gives the heavy-tailed client
+    sizes the paper's heterogeneity experiments vary — and realizes them as
+    a multinomial so the counts are integers that sum exactly to ``total``.
+    These drive size-weighted aggregation (``FederatedConfig.
+    weight_by_size``), where client i's weight in the server mean is
+    n_i / sum_j n_j.
+    """
+    total = int(total) or 512 * num_clients
+    if total < num_clients:
+        raise ValueError(
+            f"total={total} examples cannot give {num_clients} clients "
+            ">= 1 example each")
+    if partition == "iid":
+        base = total // num_clients
+        counts = np.full(num_clients, base, np.int64)
+        counts[: total - base * num_clients] += 1
+        return counts
+    if partition == "dirichlet":
+        # offset the seed so sizes are not correlated with topic mixtures
+        rng = np.random.default_rng(seed + 4242)
+        p = rng.dirichlet(np.full(num_clients, dirichlet_alpha))
+        return rng.multinomial(total - num_clients, p) + 1
+    raise ValueError(partition)
+
+
 class FederatedDataset:
     """Per-client infinite batch iterator over the synthetic LM."""
 
     def __init__(self, vocab_size: int, num_clients: int, *, seq_len: int,
                  batch_per_client: int, partition: str = "iid",
                  dirichlet_alpha: float = 0.5, seed: int = 0,
-                 num_topics: int = 8):
+                 num_topics: int = 8, total_examples: int = 0):
         self.lm = SyntheticLM(vocab_size, num_topics, seed=seed)
         self.mix = client_topic_mixtures(num_clients, num_topics,
                                          partition=partition,
                                          dirichlet_alpha=dirichlet_alpha,
                                          seed=seed)
+        self.sizes = client_example_counts(num_clients, total=total_examples,
+                                           partition=partition,
+                                           dirichlet_alpha=dirichlet_alpha,
+                                           seed=seed)
         self.num_clients = num_clients
         self.seq_len = seq_len
         self.batch = batch_per_client
         self.rngs = [np.random.default_rng(seed + 1000 + i)
                      for i in range(num_clients)]
+
+    @property
+    def size_weights(self):
+        """(N,) float: each client's share of the example pool — the
+        weights size-weighted aggregation uses in the server mean."""
+        return self.sizes / self.sizes.sum()
 
     def client_batch(self, i: int):
         rng = self.rngs[i]
@@ -99,6 +140,42 @@ class FederatedDataset:
     def set_rng_state(self, state: str) -> None:
         for rng, st in zip(self.rngs, json.loads(state)):
             rng.bit_generator.state = st
+
+    def _lm_fingerprint(self) -> str:
+        """Digest of the seed-derived LM transition tables: the partition
+        can be restored from a checkpoint, the tables cannot — a mismatch
+        means the restoring process built the dataset from a different
+        seed and the data stream would silently diverge."""
+        import hashlib
+        return hashlib.sha1(
+            np.ascontiguousarray(self.lm.succ).tobytes()).hexdigest()[:16]
+
+    def partition_state(self) -> str:
+        """Serialized client partition (topic mixtures + example counts,
+        plus the LM-table fingerprint) — checkpointed so a restored run
+        provably resumes under the same clients even if the dataset was
+        reconstructed differently."""
+        return json.dumps({"mix": self.mix.tolist(),
+                           "sizes": self.sizes.tolist(),
+                           "lm": self._lm_fingerprint()})
+
+    def set_partition_state(self, state: str) -> None:
+        st = json.loads(state)
+        if "lm" in st and st["lm"] != self._lm_fingerprint():
+            raise ValueError(
+                "checkpoint was written against a dataset with different "
+                "LM transition tables (different seed/vocab/topics) — "
+                "reconstruct the FederatedDataset with the original "
+                "parameters to resume bit-exactly")
+        mix = np.asarray(st["mix"], np.float64)
+        sizes = np.asarray(st["sizes"], np.int64)
+        if mix.shape != self.mix.shape:
+            raise ValueError(
+                f"checkpoint partition has {mix.shape[0]} clients x "
+                f"{mix.shape[1]} topics; this dataset has "
+                f"{self.mix.shape[0]} x {self.mix.shape[1]}")
+        self.mix = mix
+        self.sizes = sizes
 
 
 class DeviceFederatedData:

@@ -8,6 +8,11 @@ On a mesh the same entry point shards the client dim over the mesh's client
 axes ("pod","data") and runs the compiled scan engine:
   ... --mesh 4x2 --clients 8 --chunk-rounds 10 --data-mode device
 (see launch/dryrun.py for the compile-only proof of the production meshes).
+
+Heterogeneous clients (per-client ranks + per-client gamma_i, Dirichlet
+non-IID sizes, size-weighted aggregation):
+  ... --clients 4 --ranks 4,8,16,16 --partition dirichlet \
+      --dirichlet-alpha 0.3 --weight-by-size
 """
 from __future__ import annotations
 
@@ -28,6 +33,11 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale variant (CPU)")
     ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--ranks", default="",
+                    help="comma-separated per-client ranks (heterogeneous "
+                         "clients), e.g. 4,8,16,16; overrides --rank — "
+                         "clients pad to max(ranks) with a rank mask and "
+                         "train with their own gamma_i")
     ap.add_argument("--alpha", type=float, default=8.0)
     ap.add_argument("--scaling", default="sfedlora",
                     choices=("lora", "rslora", "sfedlora", "za", "zb"))
@@ -43,6 +53,12 @@ def main(argv=None):
     ap.add_argument("--batch-per-client", type=int, default=4)
     ap.add_argument("--partition", default="iid",
                     choices=("iid", "dirichlet"))
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.5,
+                    help="Dir(alpha) concentration for the non-IID "
+                         "partition (topic mixtures AND client sizes)")
+    ap.add_argument("--weight-by-size", action="store_true",
+                    help="weight the server aggregate by per-client "
+                         "example counts instead of a plain mean")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk-rounds", type=int, default=0,
                     help="rounds per compiled scan chunk (0: one chunk per "
@@ -63,29 +79,39 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
+    ranks = (tuple(int(r) for r in args.ranks.split(","))
+             if args.ranks else None)
     ds = FederatedDataset(cfg.vocab_size, args.clients, seq_len=args.seq,
                           batch_per_client=args.batch_per_client,
-                          partition=args.partition, seed=args.seed)
+                          partition=args.partition,
+                          dirichlet_alpha=args.dirichlet_alpha,
+                          seed=args.seed)
     mesh = mesh_from_spec(args.mesh)
     tr = FederatedTrainer(
         model, ds,
-        lora_cfg=LoRAConfig(rank=args.rank, alpha=args.alpha,
+        lora_cfg=LoRAConfig(rank=args.rank, ranks=ranks, alpha=args.alpha,
                             scaling=args.scaling, targets=cfg.lora_targets),
         fed_cfg=FederatedConfig(num_clients=args.clients,
                                 local_steps=args.local_steps,
                                 rounds=args.rounds,
                                 aggregation=args.strategy,
                                 partition=args.partition,
-                                participation=args.participation),
+                                dirichlet_alpha=args.dirichlet_alpha,
+                                participation=args.participation,
+                                weight_by_size=args.weight_by_size),
         opt_cfg=OptimizerConfig(name=args.optimizer, lr=args.lr),
         seed=args.seed, data_mode=args.data_mode,
         chunk_rounds=args.chunk_rounds, mesh=mesh)
     if args.resume:
         tr.restore(args.resume)
         print(f"# resumed from {args.resume} at round {tr.round_idx}")
+    gamma_str = (f"gamma={tr.gamma:.4f} rank={args.rank}" if ranks is None
+                 else "gammas=" + ",".join(f"{g:.3f}" for g in tr.gammas)
+                 + f" ranks={args.ranks}")
     print(f"# {args.arch}{' (reduced)' if args.reduced else ''}  "
           f"strategy={args.strategy} scaling={args.scaling} "
-          f"gamma={tr.gamma:.4f} rank={args.rank} N={args.clients}"
+          f"{gamma_str} N={args.clients}"
+          + (" weight-by-size" if args.weight_by_size else "")
           + (f" mesh={args.mesh}" if args.mesh else ""))
     tr.run(args.rounds, log_every=max(1, args.rounds // 10))
     ppl = tr.eval_perplexity()

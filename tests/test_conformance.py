@@ -1,0 +1,444 @@
+"""Cross-strategy x cross-tier conformance harness.
+
+Every registered aggregation strategy must satisfy the same server-side
+contract, on both kernel tiers (reference jnp and the Pallas interpreter):
+
+  (a) post-aggregate agreement: every leaf a strategy aggregates is
+      identical across clients afterwards,
+  (b) idempotence: aggregating identical clients changes nothing (for the
+      stacking aggregator: nothing about the B A product),
+  (c) flora's stacked product equals the brute-force weighted sum of the
+      per-client B_i A_i products,
+  (d) the heterogeneous (padded-rank) engine with all ranks equal is
+      BIT-identical to the homogeneous engine — chunked and per-round.
+
+Plus the heterogeneous invariants the padded representation promises: a
+mixed-rank federation runs under jit for every strategy while the masked
+rank rows/cols stay exactly zero through training and aggregation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.core.aggregation import STRATEGIES, get_strategy
+from repro.core.federated import FederatedTrainer
+from repro.core.lora import rank_mask, scale_lora_b
+from repro.data.synthetic import FederatedDataset
+from repro.kernels import dispatch
+from repro.models.api import build_model
+
+TIERS = ("reference", "interpret")
+
+# the interpret tier emulates the Pallas kernels in Python — keep its model
+# at the same (minimal) scale test_engine uses for its interpret parity test
+_SCALE = {
+    "reference": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      head_dim=16, d_ff=128, n=3, seq=16, batch=2,
+                      local_steps=2, rounds=3, rank=4),
+    "interpret": dict(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                      head_dim=16, d_ff=64, n=2, seq=8, batch=1,
+                      local_steps=1, rounds=2, rank=4),
+}
+
+
+@pytest.fixture(scope="module")
+def tier_models():
+    out = {}
+    for tier, s in _SCALE.items():
+        cfg = ModelConfig(name=f"conf-{tier}", family="dense",
+                          num_layers=s["num_layers"], d_model=s["d_model"],
+                          num_heads=s["num_heads"],
+                          num_kv_heads=s["num_kv_heads"],
+                          head_dim=s["head_dim"], d_ff=s["d_ff"],
+                          vocab_size=64, use_pallas=(tier == "interpret"))
+        model = build_model(cfg)
+        out[tier] = (model, model.init(jax.random.key(0)))
+    return out
+
+
+def make_trainer(model, base, tier, *, strategy, ranks=None,
+                 chunk_rounds=0, participation=1.0, weight_by_size=False,
+                 partition="iid", optimizer="sgd", seed=0):
+    s = _SCALE[tier]
+    ds = FederatedDataset(64, s["n"], seq_len=s["seq"],
+                          batch_per_client=s["batch"], partition=partition,
+                          seed=seed)
+    return FederatedTrainer(
+        model, ds,
+        lora_cfg=LoRAConfig(rank=s["rank"], ranks=ranks),
+        fed_cfg=FederatedConfig(num_clients=s["n"],
+                                local_steps=s["local_steps"],
+                                aggregation=strategy,
+                                participation=participation,
+                                partition=partition,
+                                weight_by_size=weight_by_size),
+        opt_cfg=OptimizerConfig(name=optimizer, lr=0.05), seed=seed,
+        base_params=base, chunk_rounds=chunk_rounds)
+
+
+def assert_state_bitequal(tr_a, tr_b):
+    for x, y in zip(jax.tree.leaves((tr_a.lora, tr_a.opt_state)),
+                    jax.tree.leaves((tr_b.lora, tr_b.opt_state))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _rand_lora(key, n, r, d=6, stack=()):
+    ka, kb = jax.random.split(key)
+    return {"x": {"attn": {"q": {
+        "a": jax.random.normal(ka, (n,) + stack + (r, d)),
+        "b": jax.random.normal(kb, (n,) + stack + (d, r))}}}}
+
+
+def _leaves_ab(tree):
+    node = tree["x"]["attn"]["q"]
+    return np.asarray(node["a"]), np.asarray(node["b"])
+
+
+# ------------------------- (d) homogeneous-rank het == homogeneous engine
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_uniform_rank_het_bit_identical_to_homogeneous(tier_models, tier,
+                                                       strategy):
+    """The padded-rank path with ranks = (r,)*N (mask all ones, uniform
+    gamma_i) must be BIT-identical to the homogeneous engine, chunked AND
+    per-round, for every strategy, on both tiers."""
+    model, base = tier_models[tier]
+    s = _SCALE[tier]
+    uniform = (s["rank"],) * s["n"]
+    dispatch.force_mode(tier if tier == "interpret" else None)
+    try:
+        hom = make_trainer(model, base, tier, strategy=strategy,
+                           chunk_rounds=s["rounds"])
+        hom.run(s["rounds"])
+        het_chunk = make_trainer(model, base, tier, strategy=strategy,
+                                 ranks=uniform, chunk_rounds=s["rounds"])
+        het_chunk.run(s["rounds"])
+        het_seq = make_trainer(model, base, tier, strategy=strategy,
+                               ranks=uniform, chunk_rounds=1)
+        for _ in range(s["rounds"]):
+            het_seq.run_round()
+    finally:
+        dispatch.force_mode(None)
+    assert het_chunk.rank_mask is not None          # the masked path ran
+    assert_state_bitequal(hom, het_chunk)
+    assert_state_bitequal(het_chunk, het_seq)
+
+
+def test_uniform_rank_het_bit_identical_with_participation(tier_models):
+    """The rank-aware weighted mean composes with participation sampling
+    without perturbing the homogeneous bits (same carried PRNG stream)."""
+    model, base = tier_models["reference"]
+    uniform = (4,) * _SCALE["reference"]["n"]
+    hom = make_trainer(model, base, "reference", strategy="fedsa",
+                       participation=0.5, chunk_rounds=2)
+    hom.run(4)
+    het = make_trainer(model, base, "reference", strategy="fedsa",
+                       ranks=uniform, participation=0.5, chunk_rounds=2)
+    het.run(4)
+    assert_state_bitequal(hom, het)
+
+
+# ----------------------------------- (a) post-aggregate client agreement
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("round_idx", (0, 1))
+def test_post_aggregate_client_agreement(strategy, round_idx):
+    """Every leaf the strategy aggregates is identical across clients after
+    the server step (rolora alternates which leaf that is by round)."""
+    strat = get_strategy(strategy)
+    lora = _rand_lora(jax.random.key(round_idx), n=4, r=3)
+    out = strat.aggregate(lora, round_idx)
+    aa, ab = strat.agg_flags(round_idx)
+    for flag, leaf in zip((aa, ab), _leaves_ab(out)):
+        if bool(flag):
+            for i in range(1, leaf.shape[0]):
+                np.testing.assert_allclose(leaf[i], leaf[0], rtol=1e-6,
+                                           atol=1e-7)
+
+
+# --------------------------------- (b) idempotence on identical clients
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_aggregate_identical_clients_is_noop(strategy):
+    """When every client already holds the same adapters, aggregation must
+    not move them: flag strategies return the inputs; the stacking
+    aggregator may refactor (SVD) but must preserve the B A product."""
+    strat = get_strategy(strategy)
+    one = _rand_lora(jax.random.key(3), n=1, r=3)
+    lora = jax.tree.map(lambda x: jnp.broadcast_to(x, (4,) + x.shape[1:]),
+                        one)
+    out = strat.aggregate(lora, 0)
+    a_in, b_in = _leaves_ab(lora)
+    a_out, b_out = _leaves_ab(out)
+    if strategy == "flora":
+        np.testing.assert_allclose(b_out[0] @ a_out[0], b_in[0] @ a_in[0],
+                                   rtol=1e-5, atol=1e-5)
+        # and a second aggregate no longer moves the factors either
+        out2 = strat.aggregate(out, 0)
+        for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_allclose(a_out, a_in, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(b_out, b_in, rtol=1e-6, atol=1e-7)
+
+
+# ------------------- (c) flora stacking == brute-force weighted product
+
+def test_flora_stacked_product_equals_bruteforce_weighted_sum():
+    n, r, d = 3, 4, 8
+    key = jax.random.key(7)
+    ka, kb, kw = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (n, r, d))
+    # rank-1 per-client B so the weighted mean update has rank <= n <= r
+    # and the rank-r SVD redistribution is exact
+    b = jnp.zeros((n, d, r)).at[:, :, :1].set(
+        jax.random.normal(kb, (n, d, 1)))
+    w = jax.random.uniform(kw, (n,)) + 0.1
+    lora = {"x": {"attn": {"q": {"a": a, "b": b}}}}
+    out = get_strategy("flora").aggregate(lora, 0, weights=w)
+    wn = np.asarray(w) / np.asarray(w).sum()
+    want = sum(wn[i] * np.asarray(b[i] @ a[i]) for i in range(n))
+    a_out, b_out = _leaves_ab(out)
+    np.testing.assert_allclose(b_out[0] @ a_out[0], want, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_flora_heterogeneous_active_rank_stacking():
+    """Padded representation: inactive rank rows are zero, so the stacked
+    product is the sum of TRUE rank-r_i products; each client receives the
+    redistribution truncated at its own rank (top-r_i SVD components)."""
+    ranks = (2, 3, 4)
+    n, r, d = len(ranks), max(ranks), 8
+    mask = rank_mask(ranks)
+    key = jax.random.key(11)
+    ka, kb = jax.random.split(key)
+    # rank-1 true content per client (within every client's active rows)
+    a = jnp.zeros((n, r, d)).at[:, :1, :].set(
+        jax.random.normal(ka, (n, 1, d)))
+    b = jnp.zeros((n, d, r)).at[:, :, :1].set(
+        jax.random.normal(kb, (n, d, 1)))
+    lora = {"x": {"attn": {"q": {"a": a, "b": b}}}}
+    out = get_strategy("flora").aggregate(lora, 0, rank_mask=mask)
+    want = np.mean([np.asarray(b[i] @ a[i]) for i in range(n)], axis=0)
+    u, s, vh = np.linalg.svd(want, full_matrices=False)
+    a_out, b_out = _leaves_ab(out)
+    for i, r_i in enumerate(ranks):
+        # client i's inactive rows/cols are zero...
+        assert np.all(a_out[i][r_i:, :] == 0)
+        assert np.all(b_out[i][:, r_i:] == 0)
+        # ...and its product is the best rank-r_i approximation of the
+        # mean update: the top-r_i SVD truncation (exact for r_i >= 3,
+        # the update's rank)
+        trunc = (u[:, :r_i] * s[:r_i]) @ vh[:r_i, :]
+        np.testing.assert_allclose(b_out[i] @ a_out[i], trunc, rtol=1e-5,
+                                   atol=1e-6)
+
+
+# -------------------------------------- mixed-rank engine invariants
+
+def _masked_coords_zero(tr):
+    q = tr.lora["stack"]["repeat"]["p0"]["attn"]["q"]
+    a, b = np.asarray(q["a"]), np.asarray(q["b"])
+    for i, r_i in enumerate(tr.ranks):
+        assert np.all(a[i][..., r_i:, :] == 0), ("a", i, r_i)
+        assert np.all(b[i][..., :, r_i:] == 0), ("b", i, r_i)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_mixed_rank_runs_and_masked_rows_stay_zero(tier_models, strategy):
+    """A mixed-rank federation completes under jit for every strategy and
+    the inactive rank rows/cols stay EXACTLY zero across rounds, including
+    under Dirichlet size-weighted aggregation."""
+    model, base = tier_models["reference"]
+    tr = make_trainer(model, base, "reference", strategy=strategy,
+                      ranks=(2, 4, 4), partition="dirichlet",
+                      weight_by_size=True, chunk_rounds=1)
+    assert tr.gamma is None and len(set(tr.gammas)) > 1
+    for _ in range(3):
+        tr.run_round()
+        _masked_coords_zero(tr)
+    assert all(np.isfinite(h["loss"]) for h in tr.history)
+
+
+def test_mixed_rank_adamw_masked_rows_stay_zero(tier_models):
+    """AdamW's moment estimates and weight decay must not leak into the
+    inactive rows (zero grads -> zero moments -> zero updates)."""
+    model, base = tier_models["reference"]
+    tr = make_trainer(model, base, "reference", strategy="fedit",
+                      ranks=(2, 4, 4), optimizer="adamw", chunk_rounds=3)
+    tr.run(3)
+    _masked_coords_zero(tr)
+
+
+def test_scale_lora_b_gamma_folding_matches_reference():
+    """The mixed-gamma mechanism — fold gamma_i into B, call the model with
+    static gamma=1 — matches the gamma * B A parametrization in value and
+    gradients (it is how per-client gammas reach the fused kernel tier)."""
+    cfg = ModelConfig(name="fold", family="dense", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab_size=64)
+    model = build_model(cfg)
+    base = model.init(jax.random.key(0))
+    from repro.core.lora import init_lora
+    lora = init_lora(base, jax.random.key(1), LoRAConfig(rank=4))
+    lora = jax.tree.map(
+        lambda x: x + 0.01 * jax.random.normal(jax.random.key(2), x.shape),
+        lora)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 64, (2, 8)))
+    gamma = 2.5
+
+    def loss_direct(l):
+        return model.loss(base, {"tokens": toks}, lora=l, gamma=gamma)[0]
+
+    def loss_folded(l):
+        return model.loss(base, {"tokens": toks},
+                          lora=scale_lora_b(l, jnp.float32(gamma)),
+                          gamma=1.0)[0]
+
+    v1, g1 = jax.value_and_grad(loss_direct)(lora)
+    v2, g2 = jax.value_and_grad(loss_folded)(lora)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-6)
+    for x, y in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5,
+                                   atol=1e-7)
+
+
+# ------------------------------------------------ checkpoint round-trip
+
+def test_heterogeneous_checkpoint_resume_mid_chunk_bit_exact(tier_models,
+                                                             tmp_path):
+    """Save/restore mid-run with chunk boundaries that do NOT line up with
+    the uninterrupted run: the checkpoint carries the PRNG key, the
+    per-client rank mask, and the data-partition state, so the resumed
+    heterogeneous run is bit-exact."""
+    model, base = tier_models["reference"]
+    path = str(tmp_path / "het.npz")
+    ranks = (2, 4, 4)
+    kw = dict(strategy="fedsa", ranks=ranks, partition="dirichlet",
+              weight_by_size=True, participation=0.5)
+
+    full = make_trainer(model, base, "reference", chunk_rounds=3, **kw)
+    full.run(6)
+
+    half = make_trainer(model, base, "reference", chunk_rounds=2, **kw)
+    half.run(2)
+    half.save(path)
+    payload = np.load(path)
+    assert "rank_mask" in payload.files
+    np.testing.assert_array_equal(payload["rank_mask"],
+                                  np.asarray(rank_mask(ranks)))
+    assert "partition_state" in payload.files
+
+    res = make_trainer(model, base, "reference", chunk_rounds=2, **kw)
+    res.restore(path)
+    assert res.round_idx == 2
+    res.run(4)
+    assert_state_bitequal(full, res)
+    _masked_coords_zero(res)
+
+
+def test_restore_rebuilds_size_weights_from_checkpoint(tier_models,
+                                                       tmp_path):
+    """A restoring process may reconstruct the dataset with a different
+    example pool; restore() must adopt the CHECKPOINTED partition (sizes +
+    mixtures) and rebuild the engine so size-weighted aggregation resumes
+    bit-exactly — not silently keep the construction-time weights."""
+    model, base = tier_models["reference"]
+    s = _SCALE["reference"]
+    path = str(tmp_path / "sizes.npz")
+
+    def trainer(total_examples):
+        ds = FederatedDataset(64, s["n"], seq_len=s["seq"],
+                              batch_per_client=s["batch"],
+                              partition="dirichlet", seed=0,
+                              total_examples=total_examples)
+        return FederatedTrainer(
+            model, ds, lora_cfg=LoRAConfig(rank=s["rank"]),
+            fed_cfg=FederatedConfig(num_clients=s["n"],
+                                    local_steps=s["local_steps"],
+                                    aggregation="fedsa",
+                                    partition="dirichlet",
+                                    weight_by_size=True),
+            opt_cfg=OptimizerConfig(name="sgd", lr=0.05), seed=0,
+            base_params=base, chunk_rounds=2)
+
+    full = trainer(total_examples=0)
+    full.run(4)
+    half = trainer(total_examples=0)
+    half.run(2)
+    half.save(path)
+    # same LM/topic seed, but a different example pool -> different
+    # construction-time size weights
+    res = trainer(total_examples=97 * s["n"])
+    assert not np.array_equal(np.asarray(res.client_weights),
+                              np.asarray(full.client_weights))
+    res.restore(path)
+    np.testing.assert_array_equal(np.asarray(res.client_weights),
+                                  np.asarray(full.client_weights))
+    res.run(2)
+    assert_state_bitequal(full, res)
+
+
+def test_partition_state_rejects_mismatched_lm_tables():
+    """The partition (mixtures/sizes) restores from the checkpoint; the
+    seed-derived LM transition tables cannot — restoring against a dataset
+    built from a different seed must raise, not silently diverge."""
+    a = FederatedDataset(64, 3, seq_len=8, batch_per_client=1, seed=0)
+    b = FederatedDataset(64, 3, seq_len=8, batch_per_client=1, seed=1)
+    state = a.partition_state()
+    a.set_partition_state(state)            # same tables: round-trips
+    with pytest.raises(ValueError, match="transition tables"):
+        b.set_partition_state(state)
+
+
+def test_het_trainer_lora_cfg_reflects_padded_rank(tier_models):
+    model, base = tier_models["reference"]
+    tr = make_trainer(model, base, "reference", strategy="fedsa",
+                      ranks=(2, 4, 4))
+    assert tr.lora_cfg.rank == 4
+    q = tr.lora["stack"]["repeat"]["p0"]["attn"]["q"]
+    assert q["a"].shape[-2] == 4 and q["b"].shape[-1] == 4
+
+
+def test_restore_rejects_mismatched_rank_mask(tier_models, tmp_path):
+    model, base = tier_models["reference"]
+    path = str(tmp_path / "mismatch.npz")
+    het = make_trainer(model, base, "reference", strategy="fedsa",
+                      ranks=(2, 4, 4), chunk_rounds=1)
+    het.run(1)
+    het.save(path)
+    other = make_trainer(model, base, "reference", strategy="fedsa",
+                         ranks=(4, 4, 4), chunk_rounds=1)
+    with pytest.raises(ValueError, match="rank mask"):
+        other.restore(path)
+    hom = make_trainer(model, base, "reference", strategy="fedsa",
+                       chunk_rounds=1)
+    with pytest.raises(ValueError, match="rank mask"):
+        hom.restore(path)
+
+
+# ------------------------------------------------------- config errors
+
+def test_ranks_length_mismatch_raises(tier_models):
+    model, base = tier_models["reference"]
+    with pytest.raises(ValueError, match="num_clients"):
+        make_trainer(model, base, "reference", strategy="fedsa",
+                     ranks=(4, 4))
+
+
+def test_upload_bytes_per_client_matches_upload_bytes_when_uniform():
+    lora = {"x": {"q": {"a": jnp.zeros((3, 4, 8)),
+                        "b": jnp.zeros((3, 8, 4))}}}
+    for name in STRATEGIES:
+        strat = get_strategy(name)
+        per = strat.upload_bytes_per_client(lora, 0, ranks=(4, 4, 4))
+        assert per.shape == (3,)
+        assert int(per[0]) == strat.upload_bytes(lora, 0)
+        # active accounting scales linearly in the client's own rank
+        half = strat.upload_bytes_per_client(lora, 0, ranks=(2, 4, 4))
+        assert int(half[0]) * 2 == int(per[0])

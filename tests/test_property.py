@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.aggregation import aggregate_clients, strategy_flags
+from repro.core.aggregation import (_map_ab_pairs, aggregate_clients,
+                                    negate_flag, strategy_flags)
 from repro.core.scaling import predicted_moment_scale, scaling_factor
 from repro.kernels import ref
 from repro.kernels.lora_matmul import lora_matmul
@@ -67,6 +68,58 @@ def test_aggregation_idempotent_and_mean_preserving(n, seed):
     # b untouched
     np.testing.assert_array_equal(np.asarray(out["x"]["attn"]["q"]["b"]),
                                   np.asarray(lora["x"]["attn"]["q"]["b"]))
+
+
+@given(n=st.integers(2, 6), seed=st.integers(0, 100),
+       scale=st.floats(0.1, 100, allow_nan=False))
+@settings(**SET)
+def test_weight_normalization_arbitrary_nonnegative_weights(n, seed, scale):
+    """The weighted aggregate is the convex combination sum w_i x_i / sum w
+    for ARBITRARY non-negative weights (not just 0/1 participation masks) —
+    and is invariant to rescaling the weight vector, which is what lets
+    raw per-client example counts serve as size weights unnormalized."""
+    key = jax.random.key(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (n, 3, 5))
+    w = jax.random.uniform(kw, (n,)) * jnp.arange(n)  # weight 0 included
+    lora = {"x": {"attn": {"q": {"a": x, "b": jnp.zeros((n, 5, 3))}}}}
+    out = aggregate_clients(lora, True, False, weights=w)["x"]["attn"]["q"]
+    wn = np.asarray(w) / np.asarray(w).sum()
+    want = np.einsum("n,nij->ij", wn, np.asarray(x))
+    for i in range(n):
+        np.testing.assert_allclose(np.asarray(out["a"][i]), want,
+                                   rtol=1e-5, atol=1e-6)
+    out2 = aggregate_clients(lora, True, False,
+                             weights=w * scale)["x"]["attn"]["q"]
+    np.testing.assert_allclose(np.asarray(out2["a"]), np.asarray(out["a"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(flag=st.booleans())
+@settings(**SET)
+def test_negate_flag_concrete_and_traced_agree(flag):
+    """negate_flag is logical NOT on python bools (returning a bool) and on
+    traced / 0-d device bools (where `not` would raise)."""
+    out = negate_flag(flag)
+    assert isinstance(out, bool) and out == (not flag)
+    traced = jax.jit(negate_flag)(jnp.asarray(flag))
+    assert bool(traced) == (not flag)
+    assert bool(negate_flag(jnp.asarray(flag))) == (not flag)
+
+
+@given(which=st.sampled_from(["a", "b"]), seed=st.integers(0, 20))
+@settings(**SET)
+def test_map_ab_pairs_rejects_partial_adapter_nodes(which, seed):
+    """Pair-coupled aggregation over an a-only / b-only node must raise —
+    silently skipping would leave that adapter unaggregated and let
+    clients diverge."""
+    node = {which: jax.random.normal(jax.random.key(seed), (2, 3, 4))}
+    with pytest.raises(ValueError, match="needs both 'a' and 'b'"):
+        _map_ab_pairs({"x": {"q": node}}, lambda n: n)
+    # a complete sibling node does not mask the error
+    full = {"a": jnp.zeros((2, 3, 4)), "b": jnp.zeros((2, 4, 3))}
+    with pytest.raises(ValueError, match="needs both 'a' and 'b'"):
+        _map_ab_pairs({"x": {"q": node, "k": full}}, lambda n: n)
 
 
 @given(s=st.integers(1, 33), t=st.integers(1, 33),

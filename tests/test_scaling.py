@@ -5,8 +5,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.scaling import (SCALINGS, predicted_moment_scale,
-                                scaling_factor)
+from repro.core.scaling import (SCALINGS, per_client_gammas,
+                                predicted_moment_scale, scaling_factor)
 from repro.core.stability import aggregated_moment_sweep
 
 
@@ -28,6 +28,34 @@ def test_sfedlora_reduces_to_rslora_single_client():
 def test_unknown_scaling_raises():
     with pytest.raises(ValueError):
         scaling_factor("bogus", 8, 16, 4)
+
+
+@pytest.mark.parametrize("name", sorted(SCALINGS))
+def test_degenerate_rank_and_client_count_raise(name):
+    """r=0 / n_clients=0 used to flow straight into the formulas (division
+    by zero, sqrt(0) gammas); every scheme must refuse with a clear
+    message instead."""
+    for bad_r in (0, -3):
+        with pytest.raises(ValueError, match="rank r >= 1"):
+            scaling_factor(name, 8.0, bad_r, 4)
+    for bad_n in (0, -1):
+        with pytest.raises(ValueError, match="n_clients >= 1"):
+            scaling_factor(name, 8.0, 16, bad_n)
+    # valid edge: a single client at rank 1 is fine for every scheme
+    assert math.isfinite(scaling_factor(name, 8.0, 1, 1))
+
+
+def test_per_client_gammas():
+    """gamma_i = scaling(alpha, r_i, N): per-rank application of the
+    homogeneous formula, collapsing to it under uniform ranks."""
+    gs = per_client_gammas("sfedlora", 8.0, (4, 16, 16), 3)
+    assert gs == tuple(scaling_factor("sfedlora", 8.0, r, 3)
+                       for r in (4, 16, 16))
+    assert gs[1] == gs[2] and gs[0] == 2 * gs[1]     # sqrt(16/4) = 2
+    uniform = per_client_gammas("lora", 8.0, (8, 8), 2)
+    assert set(uniform) == {scaling_factor("lora", 8.0, 8, 2)}
+    with pytest.raises(ValueError, match="rank r >= 1"):
+        per_client_gammas("sfedlora", 8.0, (4, 0), 2)
 
 
 def test_moment_scale_invariance_theorem():
