@@ -120,8 +120,7 @@ def eval_top1(tr, batch: int = 32) -> float:
     """Next-token top-1 accuracy on held-out data (accuracy proxy for the
     paper's GSM8K/GLUE accuracy tables)."""
     toks = jnp.asarray(tr.dataset.eval_batch(batch))
-    lora0 = jax.tree.map(lambda x: x[0], tr.lora)
-    logits, _ = tr.model.forward(tr.base, {"tokens": toks}, lora=lora0,
-                                 gamma=tr.client_gamma(0))
+    logits, _ = tr.model.forward(tr.base, {"tokens": toks},
+                                 adapters=tr.client_adapters(0))
     pred = jnp.argmax(logits[:, :-1], -1)
     return float((pred == toks[:, 1:]).mean())

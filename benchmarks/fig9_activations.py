@@ -34,10 +34,9 @@ def main(rounds: int = 10, emit=print):
                             base=base)
             from repro.core.stability import activation_moments
             import jax as _jax
-            lora0 = _jax.tree.map(lambda x: x[0], tr.lora)
             toks = _jax.numpy.asarray(tr.dataset.eval_batch(8))
-            st = activation_moments(model, tr.base, {"tokens": toks}, lora0,
-                                    tr.gamma)
+            st = activation_moments(model, tr.base, {"tokens": toks},
+                                    tr.client_adapters(0))
             out[(method, rank)] = st
             emit(f"fig9,{method},{rank},{st['mean']:.4e},{st['var']:.4e}")
     return sweep, out

@@ -1,0 +1,92 @@
+"""Multi-tenant serving throughput: base vs 1 adapter vs K=8 banked adapters.
+
+Measures greedy KV-cache decode tokens/sec on the shared 4-layer benchmark
+model for three serving shapes:
+
+  base       no adapters — the floor (one GEMM per projection)
+  adapter1   one AdapterSet for the whole batch (classic LoRA serving)
+  bank8      a K=8 mixed-rank AdapterBank, one adapter per request gathered
+             inside the compiled step (the multi-tenant path)
+
+The interesting number is bank8/adapter1: the batched gather + per-request
+rank-r delta costs a pair of batched GEMVs per projection, so banked serving
+of 8 heterogeneous tenants should stay within a small factor of single-
+adapter serving rather than 8x (which is what one-merge-per-tenant would
+cost in executables or weight copies).
+
+Timing excludes compilation (one warm-up decode per variant); results land
+in EXPERIMENTS/bench_serve.json.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_config
+from repro.configs.base import LoRAConfig
+from repro.core.lora import AdapterBank, init_adapter_set
+from repro.launch.serve import generate, generate_banked
+from repro.models.api import build_model
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS")
+
+BATCH = 8
+STEPS = 32
+RANKS = (4, 8, 16, 8, 4, 16, 8, 8)
+
+
+def _decode_tps(fn, batch, steps, repeats=3):
+    fn()                                    # compile + warm caches
+    times = []
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        times.append(time.time() - t0)
+    dt = min(times)
+    return batch * steps / dt
+
+
+def main(steps: int = STEPS):
+    cfg = bench_config()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (BATCH, 4), 0,
+                                cfg.vocab_size)
+    max_len = 4 + steps
+
+    sets = [init_adapter_set(params, jax.random.fold_in(jax.random.key(2), i),
+                             LoRAConfig(rank=r), n_clients=len(RANKS))
+            for i, r in enumerate(RANKS)]
+    bank = AdapterBank.from_sets(sets)
+    one = sets[1]
+    ids = jnp.arange(BATCH) % bank.size
+
+    variants = {
+        "base": lambda: generate(model, params, prompt, steps, max_len),
+        "adapter1": lambda: generate(model, params, prompt, steps, max_len,
+                                     adapters=one),
+        "bank8": lambda: generate_banked(model, params, bank, ids, prompt,
+                                         steps, max_len),
+    }
+    results = {"batch": BATCH, "steps": steps, "ranks": list(RANKS)}
+    print("bench,variant,tokens_per_sec")
+    for name, fn in variants.items():
+        tps = _decode_tps(fn, BATCH, steps)
+        results[name] = {"tokens_per_sec": tps}
+        print(f"serve,{name},{tps:.1f}")
+    if results.get("adapter1") and results.get("bank8"):
+        rel = (results["bank8"]["tokens_per_sec"]
+               / results["adapter1"]["tokens_per_sec"])
+        results["bank8_vs_adapter1"] = rel
+        print(f"serve,bank8_vs_adapter1,{rel:.3f}")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "bench_serve.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote EXPERIMENTS/bench_serve.json")
+    return results
+
+
+if __name__ == "__main__":
+    main()

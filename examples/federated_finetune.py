@@ -40,7 +40,7 @@ tr = FederatedTrainer(
                             aggregation="fedsa", partition="dirichlet"),
     opt_cfg=OptimizerConfig(name="sgd", lr=1.0),  # tiny-model-scale lr
     chunk_rounds=args.chunk_rounds)  # each chunk is one compiled lax.scan
-print(f"gamma_z = 8*sqrt({args.clients}/{args.rank}) = {tr.gamma:.4f}")
+print(f"gamma_z = 8*sqrt({args.clients}/{args.rank}) = {tr.adapters.gamma:.4f}")
 tr.run(args.rounds, log_every=max(1, args.rounds // 20))
 
 print("=== stage 3: evaluate + checkpoint ===")

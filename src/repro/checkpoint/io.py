@@ -52,7 +52,8 @@ def _unlistify(node):
 
 def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
                          *, key=None, data_state: str = None,
-                         rank_mask=None, partition_state: str = None):
+                         rank_mask=None, partition_state: str = None,
+                         adapter_meta: dict = None):
     """Checkpoint one federated run.
 
     ``key`` (the trainer's carried JAX PRNG key) and ``data_state`` (the host
@@ -64,6 +65,11 @@ def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
     ``partition_state`` (the dataset's serialized client partition — topic
     mixtures + per-client example counts) round-trip the heterogeneity
     config, so a restored run can verify it resumes under the same clients.
+
+    ``adapter_meta`` ({"gammas", "alpha", "rank", "ranks", "scaling"})
+    completes the AdapterSet serialization: a consumer with no trainer (the
+    serving path) can rebuild every client's scaled adapters from the
+    checkpoint alone — see :func:`load_adapter_state`.
     """
     tree = {"base": base, "lora": lora, "opt": opt_state,
             "round": np.asarray(round_idx)}
@@ -75,6 +81,9 @@ def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
         tree["rank_mask"] = np.asarray(rank_mask)
     if partition_state is not None:
         tree["partition_state"] = np.asarray(partition_state)
+    if adapter_meta is not None:
+        tree["adapter_meta"] = {k: np.asarray(v)
+                                for k, v in adapter_meta.items()}
     save_pytree(path, tree)
 
 
@@ -82,7 +91,7 @@ def load_federated_state(path: str, *, full: bool = False):
     """Returns (base, lora, opt, round) — or, with ``full=True``,
     (base, lora, opt, round, key, data_state, extras): key/data_state are
     None for checkpoints written without them, and ``extras`` is a dict
-    holding "rank_mask" / "partition_state" when present."""
+    holding "rank_mask" / "partition_state" / "adapter_meta" when present."""
     t = load_pytree(path)
     out = (t["base"], t["lora"], t.get("opt", {}), int(t["round"]))
     if not full:
@@ -98,4 +107,56 @@ def load_federated_state(path: str, *, full: bool = False):
         extras["rank_mask"] = np.asarray(t["rank_mask"])
     if "partition_state" in t:
         extras["partition_state"] = str(np.asarray(t["partition_state"]))
+    if "adapter_meta" in t:
+        extras["adapter_meta"] = {k: np.asarray(v)
+                                  for k, v in t["adapter_meta"].items()}
     return out + (key, data_state, extras)
+
+
+def load_adapter_state(path: str, *, lora_cfg=None, n_clients: int = None):
+    """Restore ``(base_params, stacked AdapterSet)`` from a checkpoint —
+    the serving entry point: no trainer, dataset, or optimizer state needed.
+
+    New checkpoints carry ``adapter_meta`` and rebuild the exact trained
+    AdapterSet (per-client gammas, rank mask, rank/alpha).  Legacy
+    checkpoints (written before the adapter API) are upgraded from
+    ``lora_cfg`` (+ ``n_clients``, default: the checkpoint's client dim):
+    gamma is recomputed as scaling(alpha, rank, N) — the same value the
+    legacy trainer derived — and a stored rank mask is honored either way.
+    """
+    from repro.core.lora import AdapterSet, adapter_rank
+    from repro.core.scaling import per_client_gammas
+    base, lora, _, _, _, _, extras = load_federated_state(path, full=True)
+    mask = extras.get("rank_mask")
+    meta = extras.get("adapter_meta")
+    n = jax.tree.leaves(lora)[0].shape[0]
+    r_pad = adapter_rank(lora)
+    if meta is not None:
+        gammas = tuple(float(g) for g in np.asarray(meta["gammas"]).reshape(-1))
+        if len(gammas) == 1:
+            gammas = gammas * n
+        aset = AdapterSet(lora=lora, gamma=gammas,
+                          rank_mask=None if mask is None
+                          else jnp.asarray(mask, jnp.float32),
+                          rank=int(meta["rank"]), alpha=float(meta["alpha"]))
+        return base, aset
+    if lora_cfg is None:
+        raise ValueError(
+            f"checkpoint '{path}' predates adapter_meta — pass lora_cfg "
+            "(rank/alpha/scaling) to upgrade it to an AdapterSet")
+    import warnings
+    warnings.warn(
+        f"legacy checkpoint '{path}': no adapter_meta; rebuilding gammas "
+        f"from lora_cfg ({lora_cfg.scaling}, alpha={lora_cfg.alpha})",
+        stacklevel=2)
+    n_clients = n_clients or n
+    if mask is not None:
+        ranks = tuple(int(r) for r in np.asarray(mask).sum(axis=-1))
+    else:
+        ranks = (r_pad,) * n
+    gammas = per_client_gammas(lora_cfg.scaling, lora_cfg.alpha, ranks,
+                               n_clients)
+    return base, AdapterSet(lora=lora, gamma=gammas,
+                            rank_mask=None if mask is None
+                            else jnp.asarray(mask, jnp.float32),
+                            rank=r_pad, alpha=lora_cfg.alpha)

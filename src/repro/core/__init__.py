@@ -1,5 +1,6 @@
 from repro.core.scaling import scaling_factor, SCALINGS
-from repro.core.lora import init_lora, merge_lora
+from repro.core.lora import (AdapterBank, AdapterSet, init_adapter_set,
+                             init_lora, merge_lora)
 from repro.core.aggregation import (REGISTRY, STRATEGIES, Strategy,
                                     aggregate_clients, get_strategy)
 from repro.core.federated import (FederatedTrainer, make_fed_round_step,

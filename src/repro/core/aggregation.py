@@ -41,8 +41,19 @@ import numpy as np
 # the canonical adapter-tree walker and rank-mask broadcaster live with the
 # LoRA tree utilities; re-exported here under the names this module always
 # used (tests and callers import aggregation._map_ab)
+from repro.core.lora import AdapterSet
 from repro.core.lora import _walk_ab as _map_ab
 from repro.core.lora import rank_leaf_mask as _rank_weight
+
+
+def _unwrap_adapters(tree, rank_mask):
+    """Strategies take either a raw client-stacked A/B tree (+ explicit
+    ``rank_mask``) or an :class:`AdapterSet`, whose own mask is used unless
+    one is passed explicitly.  Returns (lora, rank_mask, set_or_None)."""
+    if isinstance(tree, AdapterSet):
+        return (tree.lora,
+                tree.rank_mask if rank_mask is None else rank_mask, tree)
+    return tree, rank_mask, None
 
 
 def negate_flag(flag):
@@ -174,14 +185,19 @@ class Strategy:
 
     def aggregate(self, lora_stacked, round_idx, *, weights=None,
                   rank_mask=None):
+        """Server step over a client-stacked A/B tree or an AdapterSet
+        (whose rank mask rides along; an AdapterSet comes back as one)."""
+        lora, rank_mask, aset = _unwrap_adapters(lora_stacked, rank_mask)
         aa, ab = self.agg_flags(round_idx)
-        return aggregate_clients(lora_stacked, aa, ab, weights=weights,
-                                 rank_mask=rank_mask)
+        out = aggregate_clients(lora, aa, ab, weights=weights,
+                                rank_mask=rank_mask)
+        return out if aset is None else dataclasses.replace(aset, lora=out)
 
     def upload_bytes(self, lora_stacked, round_idx: int = 0) -> int:
         """Per-round client->server bytes (host-only; concrete round_idx)."""
+        lora, _, _ = _unwrap_adapters(lora_stacked, None)
         aa, ab = self.agg_flags(round_idx)
-        return upload_bytes(lora_stacked, aa, ab)
+        return upload_bytes(lora, aa, ab)
 
     def upload_bytes_per_client(self, lora_stacked, round_idx: int = 0, *,
                                 ranks):
@@ -192,6 +208,7 @@ class Strategy:
         A / columns of B; ``ranks`` is the per-client rank list.  Host-only
         accounting, like :meth:`upload_bytes` (which it reproduces when all
         ranks equal the padded rank)."""
+        lora_stacked, _, _ = _unwrap_adapters(lora_stacked, None)
         aa, ab = self.agg_flags(round_idx)
         aa = _concrete_flag(aa, "agg_a")
         ab = _concrete_flag(ab, "agg_b")
@@ -265,6 +282,8 @@ class StackingStrategy(Strategy):
 
     def aggregate(self, lora_stacked, round_idx, *, weights=None,
                   rank_mask=None):
+        lora_stacked, rank_mask, aset = _unwrap_adapters(lora_stacked,
+                                                         rank_mask)
         def redistribute(node):
             a, b = node["a"], node["b"]          # (N,...,r,di), (N,...,do,r)
             n, r = a.shape[0], a.shape[-2]
@@ -296,7 +315,8 @@ class StackingStrategy(Strategy):
                 out["a"] = out["a"] * _rank_weight(rank_mask, out["a"], "a")
                 out["b"] = out["b"] * _rank_weight(rank_mask, out["b"], "b")
             return out
-        return _map_ab_pairs(lora_stacked, redistribute)
+        out = _map_ab_pairs(lora_stacked, redistribute)
+        return out if aset is None else dataclasses.replace(aset, lora=out)
 
 
 REGISTRY = {

@@ -38,14 +38,15 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import get_strategy
-from repro.core.lora import (apply_rank_mask, init_lora, mask_rank_tree,
-                             rank_mask, scale_lora_b)
+from repro.core.lora import (AdapterSet, apply_rank_mask, init_lora,
+                             mask_rank_tree, rank_mask)
 from repro.core.scaling import per_client_gammas, scaling_factor
 from repro.optim.optimizers import apply_updates, global_norm, make_optimizer
 
@@ -57,43 +58,70 @@ def participation_weights(key, num_clients: int, num_sampled: int):
     return jnp.zeros((num_clients,), jnp.float32).at[perm[:num_sampled]].set(1.0)
 
 
-def make_round_body(model, *, strategy, opt_cfg, gamma, rank_mask=None):
-    """Returns round_body(base, lora_N, opt_N, batches, round_idx, weights).
+def _legacy_engine_shim(builder, new_fn, gamma, rank_mask):
+    """Deprecated ``gamma=``/``rank_mask=`` engine surface: wrap the
+    AdapterSet-native function so legacy callers keep their raw-tree
+    signature (bit-identical — same code underneath)."""
+    warnings.warn(
+        f"deprecated adapter API: {builder}(gamma=..., rank_mask=...) — "
+        "the scaling factor and rank mask now travel WITH the state as an "
+        "AdapterSet; build the engine without them and pass "
+        "AdapterSet(lora=..., gamma=..., rank_mask=...)",
+        DeprecationWarning, stacklevel=3)
+    template = AdapterSet(lora=None, gamma=gamma,
+                          rank_mask=None if rank_mask is None
+                          else jnp.asarray(rank_mask, jnp.float32))
 
-    ``lora_N``/``opt_N`` have a leading client dim; ``batches`` leaves are
-    (N, local_steps, batch, ...).  Returns (lora_N, opt_N, metrics).
+    def wrapped(base, lora_N, opt_N, *args, **kwargs):
+        aset = dataclasses.replace(template, lora=lora_N)
+        out = new_fn(base, aset, opt_N, *args, **kwargs)
+        return (out[0].lora,) + out[1:]
+    return wrapped
 
-    ``gamma`` is a python float (homogeneous) or a length-N sequence of
-    per-client scaling factors gamma_i = scaling(alpha, r_i, N).  Uniform
-    sequences collapse to the static-float path, which is bit-identical to
-    the homogeneous engine; truly mixed gammas are folded into each
-    client's B matrix inside the loss (y = xW + (xA^T)(gamma_i B)^T), so
-    the gamma reaching the kernels stays a static 1.0 — required by the
-    fused Pallas tier, which bakes gamma in at trace time.
 
-    ``rank_mask`` (N, r_max) enables heterogeneous per-client ranks in the
-    padded representation: client gradients are masked to the active rank
-    rows and the server aggregate is rank-aware (see ``core/aggregation``).
+def make_round_body(model, *, strategy, opt_cfg, gamma=None, rank_mask=None):
+    """Returns round_body(base, adapters, opt_N, batches, round_idx, weights).
+
+    ``adapters`` is a client-stacked :class:`AdapterSet`: its ``lora`` tree
+    and ``opt_N`` carry a leading client dim, ``batches`` leaves are
+    (N, local_steps, batch, ...).  Returns (adapters', opt_N, metrics).
+
+    The scaling factor and the per-client rank mask are READ OFF the
+    AdapterSet — the engine no longer threads them as loose arguments:
+
+      - a python-float ``adapters.gamma`` (homogeneous, or uniform
+        per-client gammas collapsed by AdapterSet) stays static and is
+        folded into B at trace time by the model API;
+      - a per-client (N,) ``adapters.gamma`` reaches each client as a
+        traced gamma_i under the vmap and is folded into that client's B
+        inside the loss (``AdapterSet.fold_gamma``), so the gamma reaching
+        the kernels is always the static 1.0 the fused Pallas tier needs;
+      - ``adapters.rank_mask`` (N, r_max) enables heterogeneous per-client
+        ranks in the padded representation: client gradients are masked to
+        the active rank rows and the server aggregate is rank-aware (see
+        ``core/aggregation``).
+
+    ``gamma=``/``rank_mask=`` kwargs are a deprecated shim: they return a
+    wrapper with the old raw-lora-tree signature.
     """
     strat = get_strategy(strategy)
     _, opt_update = make_optimizer(opt_cfg)
-    if not isinstance(gamma, (int, float)):
-        gs = [float(g) for g in gamma]
-        gamma = gs[0] if all(g == gs[0] for g in gs) \
-            else jnp.asarray(gs, jnp.float32)
-    gamma_N = gamma if isinstance(gamma, jax.Array) else None
-    mask_N = None if rank_mask is None else jnp.asarray(rank_mask,
-                                                        jnp.float32)
 
     def client_local(base, lora, opt_state, batches, round_idx, mask_row,
-                     gamma_i):
+                     gamma_i, gamma_static):
         def step(carry, batch):
             lo, st = carry
             def loss_fn(l):
-                if gamma_i is None:
-                    return model.loss(base, batch, lora=l, gamma=gamma)
-                return model.loss(base, batch,
-                                  lora=scale_lora_b(l, gamma_i), gamma=1.0)
+                # no rank_mask here: the engine maintains the mask invariant
+                # externally (zero-init, grad masking below, re-mask after
+                # aggregation), so ``l`` is already exactly masked — passing
+                # the mask would only add a redundant traced multiply to the
+                # hot loop (and break bit-identity with the uniform-rank
+                # fast path)
+                aset = AdapterSet(
+                    lora=l,
+                    gamma=gamma_static if gamma_i is None else gamma_i)
+                return model.loss(base, batch, adapters=aset)
             (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(lo)
             gnorm = global_norm(grads)
             grads = strat.mask_grads(grads, round_idx)
@@ -109,12 +137,18 @@ def make_round_body(model, *, strategy, opt_cfg, gamma, rank_mask=None):
         (lora, opt_state), ms = jax.lax.scan(step, (lora, opt_state), batches)
         return lora, opt_state, ms
 
-    def round_body(base, lora_N, opt_N, batches, round_idx, weights=None):
+    def round_body(base, adapters, opt_N, batches, round_idx, weights=None):
         """``weights`` (N,) non-negative: 0 = non-sampled (keeps its local
         state, only receives the aggregate); positive values additionally
         weight the server mean (e.g. by client example counts)."""
+        lora_N = adapters.lora
+        mask_N = adapters.rank_mask
+        g = adapters.gamma
+        static = isinstance(g, (int, float))
+        gamma_N = None if static else jnp.asarray(g, jnp.float32)
         new_lora, new_opt, ms = jax.vmap(
-            client_local,
+            functools.partial(client_local,
+                              gamma_static=g if static else None),
             in_axes=(None, 0, 0, 0, None,
                      None if mask_N is None else 0,
                      None if gamma_N is None else 0))(
@@ -127,21 +161,25 @@ def make_round_body(model, *, strategy, opt_cfg, gamma, rank_mask=None):
             new_lora = sel(new_lora, lora_N)
             new_opt = sel(new_opt, opt_N)
         new_lora = strat.aggregate(new_lora, round_idx, weights=weights,
-                                  rank_mask=mask_N)
+                                   rank_mask=mask_N)
         metrics = {"loss": ms["loss"].mean(), "grad_norm": ms["grad_norm"].mean()}
-        return new_lora, new_opt, metrics
+        return dataclasses.replace(adapters, lora=new_lora), new_opt, metrics
 
+    if gamma is not None or rank_mask is not None:
+        return _legacy_engine_shim("make_round_body", round_body, gamma,
+                                   rank_mask)
     return round_body
 
 
-def make_fed_round_step(model, *, strategy, opt_cfg, gamma,
+def make_fed_round_step(model, *, strategy, opt_cfg, gamma=None,
                         rank_mask=None, donate: bool = True,
                         jit: bool = True):
     """Single-round entry point (back-compat shim over the round body).
 
-    Returns round_step(base, lora_N, opt_N, batches, round_idx, weights).
+    Returns round_step(base, adapters, opt_N, batches, round_idx, weights).
     With ``jit=False`` returns the raw function (multi-device tests wrap it
-    in their own pjit with explicit shardings).
+    in their own pjit with explicit shardings).  ``gamma=``/``rank_mask=``
+    are the deprecated raw-tree shim (see :func:`make_round_body`).
     """
     round_step = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
                                  gamma=gamma, rank_mask=rank_mask)
@@ -150,14 +188,18 @@ def make_fed_round_step(model, *, strategy, opt_cfg, gamma,
     return jax.jit(round_step, donate_argnums=(1, 2) if donate else ())
 
 
-def make_run_chunk(model, *, strategy, opt_cfg, gamma,
+def make_run_chunk(model, *, strategy, opt_cfg, gamma=None,
                    participation: float = 1.0, batch_fn=None,
                    rank_mask=None, client_weights=None,
                    donate: bool = True, jit: bool = True):
     """Build the chunked scan executor.
 
-    Returns run_chunk(base, lora_N, opt_N, key, round0, batches=None,
-    num_rounds=None) -> (lora_N, opt_N, key, metrics):
+    Returns run_chunk(base, adapters, opt_N, key, round0, batches=None,
+    num_rounds=None) -> (adapters, opt_N, key, metrics), where ``adapters``
+    is the client-stacked :class:`AdapterSet` the scan carries (A/B tree +
+    gamma(s) + rank mask as ONE pytree — the scaling config cannot
+    desynchronize from the state it scales).  ``gamma=``/``rank_mask=``
+    kwargs are the deprecated raw-tree shim (see :func:`make_round_body`).
 
       - ``key``     carried PRNG key; split once per round inside the scan
                     (participation sampling and on-device batch synthesis
@@ -176,20 +218,19 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma,
     (e.g. example counts for size-weighted FedAvg); they compose with the
     sampled participation mask inside the scan.
 
-    ``lora_N``/``opt_N``/``key`` are donated when ``jit`` and ``donate``.
+    ``adapters``/``opt_N``/``key`` are donated when ``jit`` and ``donate``.
     """
-    round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
-                                 gamma=gamma, rank_mask=rank_mask)
+    round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg)
     size_w = None if client_weights is None else jnp.asarray(
         client_weights, jnp.float32)
 
-    def run_chunk(base, lora_N, opt_N, key, round0, batches=None,
+    def run_chunk(base, adapters, opt_N, key, round0, batches=None,
                   num_rounds=None):
-        num_clients = jax.tree.leaves(lora_N)[0].shape[0]
+        num_clients = jax.tree.leaves(adapters.lora)[0].shape[0]
         num_sampled = max(1, int(round(participation * num_clients)))
 
         def scan_step(carry, xs):
-            lora_c, opt_c, k = carry
+            aset_c, opt_c, k = carry
             k, k_round = jax.random.split(k)
             k_data, k_sample = jax.random.split(k_round)
             if batch_fn is None:
@@ -203,9 +244,9 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma,
                                                 num_sampled)
             if size_w is not None:
                 weights = size_w if weights is None else weights * size_w
-            lora_c, opt_c, metrics = round_body(base, lora_c, opt_c, b,
+            aset_c, opt_c, metrics = round_body(base, aset_c, opt_c, b,
                                                 round_idx, weights)
-            return (lora_c, opt_c, k), metrics
+            return (aset_c, opt_c, k), metrics
 
         if batch_fn is None:
             if batches is None:
@@ -218,10 +259,13 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma,
                 raise ValueError("run_chunk needs a static `num_rounds` "
                                  "when batches are generated on device")
             xs = round0 + jnp.arange(num_rounds)
-        (lora_N, opt_N, key), ms = jax.lax.scan(
-            scan_step, (lora_N, opt_N, key), xs)
-        return lora_N, opt_N, key, ms
+        (adapters, opt_N, key), ms = jax.lax.scan(
+            scan_step, (adapters, opt_N, key), xs)
+        return adapters, opt_N, key, ms
 
+    if gamma is not None or rank_mask is not None:
+        run_chunk = _legacy_engine_shim("make_run_chunk", run_chunk, gamma,
+                                        rank_mask)
     if not jit:
         return run_chunk
     return jax.jit(run_chunk, static_argnames=("num_rounds",),
@@ -293,7 +337,6 @@ class FederatedTrainer:
                                         lora_cfg.rank, n)
             self.gammas = (self.gamma,) * n
         self.lora_cfg = lora_cfg      # reflects the padded rank when het
-        engine_gamma = self.gammas if ranks is not None else self.gamma
         key = jax.random.key(seed)
         kb, kl = jax.random.split(key)
         self.base = base_params if base_params is not None else model.init(kb)
@@ -317,7 +360,6 @@ class FederatedTrainer:
                     "size_weights (per-client example counts)")
             self.client_weights = jnp.asarray(dataset.size_weights,
                                               jnp.float32)
-        self._engine_gamma = engine_gamma
 
         if data_mode == "device":
             from repro.data.synthetic import DeviceFederatedData
@@ -332,10 +374,12 @@ class FederatedTrainer:
         self.history = []
         if mesh is not None:
             self._place_on_mesh(mesh)
-        # cached so repeated evals reuse one compilation (gamma is static:
-        # the fused kernel tier bakes it into the Pallas kernels at trace
-        # time, so it cannot be a traced argument)
-        self._eval_loss = jax.jit(model.loss, static_argnames=("gamma",))
+        # cached so repeated evals reuse one compilation (a float gamma
+        # rides in the AdapterSet treedef, so it stays trace-static — the
+        # fused kernel tier's requirement — and each distinct gamma gets
+        # its own executable, exactly like the old static_argnames path)
+        self._eval_loss = jax.jit(
+            lambda p, b, adapters: model.loss(p, b, adapters=adapters))
 
     def _build_engine(self):
         """(Re)build the compiled chunk executor from the current config,
@@ -351,21 +395,43 @@ class FederatedTrainer:
                 "tokens": device_data.sample_round(k, local_steps)}
         self._run_chunk = make_run_chunk(
             self.model, strategy=self.fed_cfg.aggregation,
-            opt_cfg=self.opt_cfg, gamma=self._engine_gamma,
+            opt_cfg=self.opt_cfg,
             participation=self.fed_cfg.participation, batch_fn=batch_fn,
-            rank_mask=self.rank_mask, client_weights=self.client_weights,
-            donate=True)
+            client_weights=self.client_weights, donate=True)
 
     @functools.cached_property
     def round_step(self):
         """Single-round entry over externally supplied batches (callers with
         modality stubs the synthetic dataset cannot produce):
-        round_step(base, lora_N, opt_N, batches, round_idx, weights=None).
+        round_step(base, adapters, opt_N, batches, round_idx, weights=None)
+        with ``adapters`` a client-stacked AdapterSet (``trainer.adapters``).
         Compiled lazily — the engine itself runs through ``run_chunk``."""
         return make_fed_round_step(
             self.model, strategy=self.fed_cfg.aggregation,
-            opt_cfg=self.opt_cfg, gamma=self._engine_gamma,
-            rank_mask=self.rank_mask, donate=False)
+            opt_cfg=self.opt_cfg, donate=False)
+
+    # ------------------------------------------------------------- adapters
+
+    @property
+    def adapters(self) -> AdapterSet:
+        """The trainer's client-stacked AdapterSet: the A/B state plus the
+        per-client scaling factors and rank mask as one pytree — the unit
+        the engine carries, checkpoints serialize, and serving registers
+        into an AdapterBank."""
+        gamma = self.gammas if self.ranks is not None else self.gamma
+        return AdapterSet(lora=self.lora, gamma=gamma,
+                          rank_mask=self.rank_mask,
+                          rank=self.lora_cfg.rank, alpha=self.lora_cfg.alpha)
+
+    def client_adapters(self, client: int) -> AdapterSet:
+        """Client ``client``'s personalized AdapterSet (own gamma_i and
+        rank-mask row) — what that client deploys."""
+        mask = None if self.rank_mask is None else self.rank_mask[client]
+        r = self.ranks[client] if self.ranks else self.lora_cfg.rank
+        return AdapterSet(
+            lora=jax.tree.map(lambda x: x[client], self.lora),
+            gamma=self.gammas[client], rank_mask=mask, rank=int(r),
+            alpha=self.lora_cfg.alpha)
 
     # ------------------------------------------------------------- sharding
 
@@ -405,9 +471,14 @@ class FederatedTrainer:
         else:
             kwargs["batches"] = self._stage_batches(num_rounds)
         with self._mesh_scope():
-            self.lora, self.opt_state, self._key, ms = self._run_chunk(
-                self.base, self.lora, self.opt_state, self._key,
+            aset, self.opt_state, self._key, ms = self._run_chunk(
+                self.base, self.adapters, self.opt_state, self._key,
                 jnp.asarray(self.round_idx, jnp.int32), **kwargs)
+        # only the A/B tree is engine state (gamma/rank mask are static
+        # config riding in the AdapterSet treedef — the trainer keeps its
+        # own uniform-rank mask even though the canonical AdapterSet form
+        # collapses an all-ones mask to None)
+        self.lora = aset.lora
         ms = {k: np.asarray(v) for k, v in ms.items()}
         out = []
         for i in range(num_rounds):
@@ -448,9 +519,8 @@ class FederatedTrainer:
     def eval_perplexity(self, batch: int = 16, client: int = 0) -> float:
         """Held-out perplexity using client ``client``'s personalized model."""
         toks = jnp.asarray(self.dataset.eval_batch(batch))
-        lora_i = jax.tree.map(lambda x: x[client], self.lora)
-        loss, _ = self._eval_loss(self.base, {"tokens": toks}, lora=lora_i,
-                                  gamma=self.client_gamma(client))
+        loss, _ = self._eval_loss(self.base, {"tokens": toks},
+                                  self.client_adapters(client))
         return float(jnp.exp(loss))
 
     # ----------------------------------------------------------- checkpoint
@@ -458,7 +528,9 @@ class FederatedTrainer:
     def save(self, path: str) -> None:
         """Checkpoint state + round index + PRNG key (+ the host dataset's
         RNG stream state, the per-client rank mask, and the data-partition
-        state) so a restored run continues bit-exactly."""
+        state) so a restored run continues bit-exactly.  The whole
+        AdapterSet round-trips: gammas/alpha/ranks/scaling ride along as
+        ``adapter_meta`` so serving can rebuild it without the trainer."""
         from repro.checkpoint.io import save_federated_state
         data_state = None
         if self.data_mode == "host" and hasattr(self.dataset, "rng_state"):
@@ -466,11 +538,21 @@ class FederatedTrainer:
         partition_state = None
         if hasattr(self.dataset, "partition_state"):
             partition_state = self.dataset.partition_state()
+        meta = {
+            "gammas": np.asarray(self.gammas, np.float32),
+            "alpha": float(self.lora_cfg.alpha),
+            "rank": int(self.lora_cfg.rank),
+            "ranks": np.asarray(self.ranks if self.ranks is not None
+                                else (self.lora_cfg.rank,)
+                                * self.fed_cfg.num_clients, np.int64),
+            "scaling": self.lora_cfg.scaling,
+        }
         save_federated_state(path, self.base, self.lora, self.opt_state,
                              self.round_idx, key=self._key,
                              data_state=data_state,
                              rank_mask=self.rank_mask,
-                             partition_state=partition_state)
+                             partition_state=partition_state,
+                             adapter_meta=meta)
 
     def restore(self, path: str) -> None:
         from repro.checkpoint.io import load_federated_state

@@ -1,4 +1,4 @@
-"""LoRA parameter trees mirroring a model's stacked block parameters.
+"""LoRA parameter trees and the first-class adapter API.
 
 The LoRA tree has the same {"stack": {"repeat": {"p0": ...}, "tail": ...}}
 shape as the base params, but each targeted projection leaf ``w (d_in, d_out)``
@@ -6,11 +6,26 @@ becomes ``{"a": (r, d_in), "b": (d_out, r)}`` (stacked over the scan dim for
 repeated blocks, and over the client dim in federated training).
 
 Initialization follows the paper / standard LoRA: A ~ N(0, sigma^2), B = 0.
+
+The unit the rest of the codebase consumes is :class:`AdapterSet` — the A/B
+tree, the scaling factor gamma, the (optional) per-client rank mask, and the
+rank/alpha metadata traveling as ONE registered pytree.  Every place that
+used to thread ``(lora, gamma, rank_mask)`` as loose arguments (the model
+API, the federated engine, checkpointing, serving) takes a single
+``adapters=`` argument instead, and every gamma fold — static, traced,
+per-client — happens in exactly one place: :meth:`AdapterSet.fold_gamma`.
+:class:`AdapterBank` stacks K prepared adapter sets for multi-tenant
+serving: per-request adapter ids gather from the bank inside one compiled
+decode step.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as onp
 
 # which leaves inside each block subtree are adaptable, per target name
 _TARGET_SUBTREES = ("attn", "cross", "mlstm", "rglru")
@@ -190,3 +205,370 @@ def split_ab(lora):
         return node
 
     return pick(lora, "a"), pick(lora, "b")
+
+
+# ----------------------------------------------------------- first-class API
+#
+# AdapterSet / AdapterBank: (lora, gamma, rank_mask) as one pytree.
+
+def adapter_rank(lora) -> int:
+    """The (padded) rank of a LoRA tree, read off the first A leaf."""
+    for leaf in jax.tree.leaves(lora):
+        return int(leaf.shape[-2])   # a: (..., r, d_in) visited first ("a"<"b")
+    return 0
+
+
+def pad_rank_tree(lora, r_max: int):
+    """Zero-pad every adapter to rank ``r_max`` (rows of A, columns of B).
+
+    Zero rank rows/columns contribute nothing to x A^T B^T, so padding is
+    exact — it is how mixed-rank adapters share one stacked bank."""
+    def pad(x, axis):
+        extra = r_max - x.shape[axis]
+        if extra < 0:
+            raise ValueError(
+                f"adapter rank {x.shape[axis]} exceeds r_max={r_max}")
+        if extra == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, extra)
+        return jnp.pad(x, widths)
+    return _walk_ab(lora, lambda a: pad(a, a.ndim - 2),
+                    lambda b: pad(b, b.ndim - 1))
+
+
+def _static_gamma(gamma) -> bool:
+    return isinstance(gamma, (int, float))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSet:
+    """A/B tree + scaling factor + rank mask + metadata as ONE pytree.
+
+    ``gamma`` is a python float (static — baked into the trace, the fused
+    kernel tier's requirement) or a jax scalar/(N,) array (traced or
+    per-client — folded into B by :meth:`fold_gamma` so the kernels still
+    see a static scale).  ``rank_mask`` is ``(r,)`` for a single client or
+    ``(N, r)``/``(K, r)`` for client-stacked / bank-gathered sets; ``None``
+    means every rank row is active.  ``rank``/``alpha`` are bookkeeping
+    metadata (checkpoint round-trips, bank registration).  ``batched`` marks
+    a per-request set gathered from an :class:`AdapterBank`: every leaf
+    carries a leading request dim that pairs with the batch row of ``x``.
+
+    Pytree layout: ``lora`` is a child; ``gamma`` and ``rank_mask`` are
+    CONFIG, not state — when they are concrete host values (a float, a
+    materialized array) they ride in the treedef as static aux data, so
+    under jit they become trace-time constants: a float gamma is baked into
+    the fused Pallas kernels exactly like the old static argument, and an
+    all-ones rank mask constant-folds to nothing, keeping the uniform-rank
+    path bit-identical to the mask-free one.  Only traced values (a
+    per-request mask from ``AdapterBank.gather``, a per-client gamma_i
+    under the engine's vmap) become pytree children.  Two sets with
+    different static configs compile separately — by design.
+    """
+    lora: Any
+    gamma: Any = 1.0
+    rank_mask: Any = None
+    rank: int = 0
+    alpha: float = 0.0
+    batched: bool = False
+
+    def __post_init__(self):
+        # Normalize concrete config to HOST values once, here: pytree
+        # flatten runs inside jaxlib's C++ dispatch, where a device->host
+        # transfer is not safe — by construction the flatten below only
+        # ever serializes numpy data.  Traced values pass through.
+        g = self.gamma
+        if isinstance(g, (tuple, list)):
+            gs = [float(x) for x in g]
+            g = gs[0] if all(x == gs[0] for x in gs) \
+                else onp.asarray(gs, onp.float32)
+            object.__setattr__(self, "gamma", g)
+        elif isinstance(g, jax.Array) and not isinstance(g, jax.core.Tracer):
+            g = onp.asarray(g)
+            object.__setattr__(self, "gamma",
+                               float(g) if g.ndim == 0 else g)
+        m = self.rank_mask
+        if m is not None and not isinstance(m, jax.core.Tracer):
+            m = onp.asarray(m)
+            # canonical form: an all-ones mask masks nothing — collapse it
+            # to None (exactly like uniform gammas collapse to one float),
+            # so uniform-rank federations take the homogeneous fast path
+            # bit-for-bit instead of compiling degenerate mask multiplies
+            object.__setattr__(self, "rank_mask",
+                               None if m.all() else m)
+
+    # ---------------------------------------------------------- constructors
+
+    @classmethod
+    def from_config(cls, lora_cfg, *, n_clients: int = 1, lora=None,
+                    rank_mask=None) -> "AdapterSet":
+        """AdapterSet for a :class:`LoRAConfig`: the scheme's scaling factor
+        gamma = scaling(alpha, r, N) is derived HERE — call sites never
+        assemble gamma by hand.  ``lora`` may be a real A/B tree, a
+        shape-level stand-in (dryrun), or None to fill in later."""
+        from repro.core.scaling import scaling_factor
+        gamma = scaling_factor(lora_cfg.scaling, lora_cfg.alpha,
+                               lora_cfg.rank, n_clients)
+        return cls(lora=lora, gamma=gamma, rank_mask=rank_mask,
+                   rank=lora_cfg.rank, alpha=lora_cfg.alpha)
+
+    # ------------------------------------------------------------ transforms
+
+    def masked(self) -> "AdapterSet":
+        """Zero the inactive rank rows of A / columns of B per the mask.
+
+        Idempotent (the mask is 0/1), and a bitwise no-op on adapters that
+        already satisfy the mask invariant — gradients taken through the
+        masked tree come out exactly zero at inactive coordinates."""
+        if self.rank_mask is None:
+            return self
+        m = jnp.asarray(self.rank_mask)
+        lora = (mask_rank_tree(self.lora, m) if m.ndim == 1
+                else apply_rank_mask(self.lora, m))
+        return dataclasses.replace(self, lora=lora)
+
+    def fold_gamma(self) -> "AdapterSet":
+        """Fold gamma into B: y = xW + (x A^T)(gamma B)^T == xW + gamma B A x.
+
+        THE one place gamma is folded.  Handles a static float (folded at
+        trace time), a traced scalar (per-client gamma_i under the engine's
+        vmap), and a per-client/per-tenant (N,) array on a stacked tree.
+        The result always carries the static ``gamma=1.0`` the fused Pallas
+        tier requires."""
+        g = self.gamma
+        if _static_gamma(g):
+            if float(g) == 1.0:
+                return self
+            lora = scale_lora_b(self.lora, float(g))
+        else:
+            garr = jnp.asarray(g)
+            if garr.ndim == 0:
+                lora = scale_lora_b(self.lora, garr)
+            else:
+                fb = lambda x: x * garr.reshape(
+                    garr.shape + (1,) * (x.ndim - 1)).astype(x.dtype)
+                lora = _walk_ab(self.lora, lambda a: a, fb)
+        return dataclasses.replace(self, lora=lora, gamma=1.0)
+
+    def prepared(self) -> "AdapterSet":
+        """Mask + fold: the canonical form the model stack consumes
+        (plain A/B tree, implicit scale 1)."""
+        return self.masked().fold_gamma()
+
+    def merge(self, params):
+        """W0 + gamma * B A merged into the base weights (inference-time,
+        zero-latency deployment — the paper's 'no inference cost'
+        property)."""
+        return merge_lora(params, self.prepared().lora, 1.0)
+
+    # ---------------------------------------------------------- stack/unstack
+
+    @classmethod
+    def stack(cls, sets) -> "AdapterSet":
+        """Stack K same-rank sets along a new leading dim (clients/tenants).
+
+        Uniform float gammas stay one static float; mixed gammas become a
+        (K,) array child.  Mixed ranks must be padded first — see
+        :meth:`AdapterBank.from_sets`, which handles that."""
+        sets = list(sets)
+        if not sets:
+            raise ValueError("AdapterSet.stack needs at least one set")
+        ranks = {adapter_rank(s.lora) for s in sets}
+        if len(ranks) > 1:
+            raise ValueError(
+                f"AdapterSet.stack needs uniform ranks, got {sorted(ranks)}; "
+                "pad first (AdapterBank.from_sets does this)")
+        lora = jax.tree.map(lambda *xs: jnp.stack(xs), *[s.lora for s in sets])
+        gammas = [s.gamma for s in sets]
+        if all(_static_gamma(g) for g in gammas):
+            gamma = tuple(float(g) for g in gammas)   # __post_init__ collapses
+        else:
+            gamma = jnp.stack([jnp.asarray(g, jnp.float32) for g in gammas])
+        r = ranks.pop()
+        if any(s.rank_mask is not None for s in sets):
+            rows = [jnp.ones((r,), jnp.float32) if s.rank_mask is None
+                    else jnp.asarray(s.rank_mask, jnp.float32)
+                    for s in sets]
+            mask = jnp.stack(rows)
+        else:
+            mask = None
+        return cls(lora=lora, gamma=gamma, rank_mask=mask, rank=r,
+                   alpha=sets[0].alpha)
+
+    def unstack(self):
+        """The inverse of :meth:`stack`: K single-client sets."""
+        n = jax.tree.leaves(self.lora)[0].shape[0]
+        return [self.client(i) for i in range(n)]
+
+    def client(self, i: int) -> "AdapterSet":
+        """Client ``i``'s slice of a client-stacked set (its own gamma_i and
+        rank-mask row included)."""
+        g = self.gamma
+        if not _static_gamma(g) and jnp.asarray(g).ndim >= 1:
+            g = jnp.asarray(g)[i]
+        m = None if self.rank_mask is None else jnp.asarray(self.rank_mask)[i]
+        return dataclasses.replace(
+            self, lora=jax.tree.map(lambda x: x[i], self.lora), gamma=g,
+            rank_mask=m, batched=False)
+
+    def num_params(self) -> int:
+        return num_lora_params(self.lora)
+
+
+def _encode_static(v):
+    """Encode a concrete config value as hashable treedef aux data; traced
+    values return None (they must travel as pytree children).  Only host
+    (numpy/python) values reach the array branch — ``AdapterSet`` normalizes
+    at construction, because flatten may run inside jaxlib's C++ dispatch
+    where device->host transfers are unsafe."""
+    if v is None:
+        return ("none",)
+    if isinstance(v, (int, float)):
+        return ("float", float(v))
+    if isinstance(v, onp.ndarray):
+        return ("array", v.shape, str(v.dtype), v.tobytes())
+    return None
+
+
+def _decode_static(enc):
+    if enc[0] == "none":
+        return None
+    if enc[0] == "float":
+        return enc[1]
+    _, shape, dtype, buf = enc
+    # .copy(): own the memory rather than viewing the treedef's bytes
+    return onp.frombuffer(buf, dtype=dtype).reshape(shape).copy()
+
+
+def _aset_flatten(s):
+    g_aux = _encode_static(s.gamma)
+    m_aux = _encode_static(s.rank_mask)
+    children = (s.lora,
+                None if m_aux is not None else s.rank_mask,
+                None if g_aux is not None else s.gamma)
+    aux = (g_aux, m_aux, s.rank, s.alpha, s.batched)
+    return children, aux
+
+
+def _aset_unflatten(aux, children):
+    lora, mask_child, gamma_child = children
+    g_aux, m_aux, rank, alpha, batched = aux
+    gamma = gamma_child if g_aux is None else _decode_static(g_aux)
+    rank_mask = mask_child if m_aux is None else _decode_static(m_aux)
+    return AdapterSet(lora=lora, gamma=gamma, rank_mask=rank_mask,
+                      rank=rank, alpha=alpha, batched=batched)
+
+
+jax.tree_util.register_pytree_node(AdapterSet, _aset_flatten, _aset_unflatten)
+
+
+def init_adapter_set(params, key, lora_cfg, *, n_clients: int = 1,
+                     targets=None) -> AdapterSet:
+    """Fresh AdapterSet for ``params`` with the scheme's scaling factor.
+
+    The single constructor call sites use instead of assembling
+    (init_lora, scaling_factor, rank metadata) by hand."""
+    return AdapterSet.from_config(
+        lora_cfg, n_clients=n_clients,
+        lora=init_lora(params, key, lora_cfg, targets=targets))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterBank:
+    """K prepared adapter sets stacked for multi-tenant serving.
+
+    Registration folds each tenant's gamma into its B and pads mixed ranks
+    to ``r_max`` under a (K, r_max) rank mask, so the bank is one uniform
+    stacked tree: a compiled decode step gathers per-request adapters with
+    ``bank.gather(ids)`` (ids traced — one executable serves every tenant
+    mix) and routes them through the batched adapter path in
+    ``kernels/dispatch``.
+    """
+    lora: Any                                 # leaves (K,) + leaf shape
+    rank_mask: Any = None                     # (K, r_max) or None
+    ranks: Tuple[int, ...] = ()               # per-tenant active ranks
+
+    @property
+    def size(self) -> int:
+        return jax.tree.leaves(self.lora)[0].shape[0]
+
+    @classmethod
+    def from_sets(cls, sets) -> "AdapterBank":
+        """Register K AdapterSets (possibly mixed-rank) as one bank."""
+        sets = [s.prepared() for s in sets]
+        ranks = tuple(adapter_rank(s.lora) for s in sets)
+        r_max = max(ranks)
+        padded = [pad_rank_tree(s.lora, r_max) for s in sets]
+        lora = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+        return cls(lora=lora, rank_mask=rank_mask(ranks, r_max), ranks=ranks)
+
+    @classmethod
+    def from_adapter_set(cls, stacked: AdapterSet, ranks=None) -> "AdapterBank":
+        """Register a client-stacked AdapterSet (e.g. a restored federated
+        checkpoint: every client becomes a tenant)."""
+        prepared = stacked.prepared()
+        n = jax.tree.leaves(prepared.lora)[0].shape[0]
+        r_pad = adapter_rank(prepared.lora)
+        if ranks is None:
+            if stacked.rank_mask is not None:
+                import numpy as _onp
+                ranks = tuple(int(r) for r in
+                              _onp.asarray(stacked.rank_mask).sum(axis=-1))
+            else:
+                ranks = (r_pad,) * n
+        return cls(lora=prepared.lora, rank_mask=rank_mask(ranks, r_pad),
+                   ranks=tuple(int(r) for r in ranks))
+
+    def gather(self, ids) -> AdapterSet:
+        """Per-request adapters: ``ids`` (b,) int tenant indices (may be
+        traced).  Returns a ``batched`` AdapterSet whose leaves carry a
+        leading request dim — gamma is already folded, so it serves under
+        the static scale 1 every kernel tier accepts.  No rank mask rides
+        along: bank registration stored the sets exactly masked and
+        zero-padded, so a gathered mask would only re-multiply every A/B
+        leaf by its own zero pattern on every decode step."""
+        ids = jnp.asarray(ids)
+        lora = jax.tree.map(lambda x: x[ids], self.lora)
+        return AdapterSet(lora=lora, gamma=1.0,
+                          rank=adapter_rank(lora), batched=True)
+
+    def adapter(self, k: int) -> AdapterSet:
+        """Tenant ``k`` as a plain single AdapterSet (the per-adapter loop
+        the bank's batched decode is conformance-tested against)."""
+        mask = None if self.rank_mask is None else self.rank_mask[k]
+        return AdapterSet(lora=jax.tree.map(lambda x: x[k], self.lora),
+                          gamma=1.0, rank_mask=mask,
+                          rank=int(self.ranks[k]) if self.ranks else 0)
+
+
+jax.tree_util.register_pytree_node(
+    AdapterBank,
+    lambda b: ((b.lora, b.rank_mask), (b.ranks,)),
+    lambda aux, ch: AdapterBank(lora=ch[0], rank_mask=ch[1], ranks=aux[0]))
+
+
+def as_adapter_set(adapters, *, lora=None, gamma=None,
+                   default_gamma: float = 0.0):
+    """Normalize an ``adapters=`` argument, upgrading the deprecated
+    ``lora=``/``gamma=`` kwargs to an AdapterSet (the shim's single home).
+
+    Returns None when no adapters were given.  A raw A/B dict passed as
+    ``adapters`` is wrapped with scale 1 (it is already a prepared tree)."""
+    if adapters is not None and (lora is not None or gamma is not None):
+        raise TypeError(
+            "pass either adapters=AdapterSet(...) or the deprecated "
+            "lora=/gamma= kwargs, not both")
+    if adapters is None:
+        if lora is None:
+            return None
+        import warnings
+        warnings.warn(
+            "deprecated adapter API: lora=/gamma= kwargs — pass "
+            "adapters=AdapterSet(lora=..., gamma=...) instead",
+            DeprecationWarning, stacklevel=3)
+        return AdapterSet(lora=lora,
+                          gamma=default_gamma if gamma is None else gamma)
+    if isinstance(adapters, AdapterSet):
+        return adapters
+    return AdapterSet(lora=adapters)

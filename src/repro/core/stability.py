@@ -56,8 +56,8 @@ def aggregated_moment_sweep(key, *, d: int = 512, ranks=(4, 32, 128, 512),
     return out
 
 
-def activation_moments(model, params, batch, lora, gamma):
+def activation_moments(model, params, batch, adapters):
     """Mean/variance of post-adapter pre-norm activations (paper Fig. 9
-    proxy): final hidden statistics."""
-    logits, _ = model.forward(params, batch, lora=lora, gamma=gamma)
+    proxy): final hidden statistics.  ``adapters`` is an AdapterSet."""
+    logits, _ = model.forward(params, batch, adapters=adapters)
     return {"mean": float(jnp.mean(logits)), "var": float(jnp.var(logits))}

@@ -57,12 +57,13 @@ _forced = contextvars.ContextVar("repro_forced_mode", default=None)
 # single-threaded tests/debugging only — cached jit calls don't re-count,
 # and concurrent traces share it.  Routing correctness itself is isolated
 # via the contextvars above.
-stats = {"fused": 0, "reference": 0}
+stats = {"fused": 0, "reference": 0, "batched": 0}
 
 
 def reset_stats() -> None:
     stats["fused"] = 0
     stats["reference"] = 0
+    stats["batched"] = 0
 
 
 def force_mode(mode) -> None:
@@ -146,13 +147,38 @@ def fused_lora_apply(x2, w, a, b, gamma, *, interpret: bool):
 
 # ----------------------------------------------------------------- dispatch
 
+def lora_linear_batched(x, w, lora, gamma: float = 1.0):
+    """Per-request adapters (multi-tenant serving): each batch row of ``x``
+    pairs with its own adapter gathered from an ``AdapterBank``.
+
+    ``x`` (B, s, d_in); ``lora`` leaves carry the leading request dim —
+    ``a`` (B, r, d_in), ``b`` (B, d_out, r).  The base projection stays one
+    shared GEMM; the delta is a pair of batched GEMMs (BGMV-style — the
+    rank-r contraction per request), which XLA lowers as grouped matmuls.
+    Each output row is bit-identical to the single-adapter path run on that
+    row alone: the contractions reduce over the same axes in the same order.
+    """
+    a, b = lora["a"], lora["b"]
+    if x.ndim != 3 or a.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"batched adapters need x (B, s, d_in) with B == a.shape[0]; "
+            f"got x {x.shape}, a {a.shape}")
+    stats["batched"] += 1
+    y = x @ w
+    xa = jnp.einsum("bsk,brk->bsr", x, a)
+    return y + gamma * jnp.einsum("bsr,bor->bso", xa, b)
+
+
 def lora_linear(x, w, lora=None, gamma: float = 0.0):
     """y = x W (+ gamma * (x A^T) B^T) through the active kernel tier.
 
     ``lora`` is ``{"a": (r, d_in), "b": (d_out, r)}`` or None; ``x`` may have
     any number of leading dims.  Base-only projections (``lora=None``) are a
-    single XLA GEMM on every tier.
+    single XLA GEMM on every tier.  Leaves with one extra leading dim
+    (``a`` 3-D) are per-request adapters and take the batched path.
     """
+    if lora is not None and lora["a"].ndim == 3:
+        return lora_linear_batched(x, w, lora, gamma)
     mode = resolve_mode()
     if (lora is None or mode == "reference"
             or 0 in (*x.shape, w.shape[1], lora["a"].shape[0])):

@@ -27,8 +27,7 @@ import jax.numpy as jnp
 from repro.configs import (ASSIGNED, INPUT_SHAPES, LoRAConfig,
                            OptimizerConfig, config_for_shape, supports_shape)
 from repro.core.federated import make_run_chunk
-from repro.core.lora import init_lora
-from repro.core.scaling import scaling_factor
+from repro.core.lora import AdapterSet, init_lora
 from repro.launch.mesh import make_production_mesh, num_clients
 from repro.models.api import build_model
 from repro.sharding import rules
@@ -92,12 +91,11 @@ def _build(arch: str, shape_name: str, mesh, rank: int, alpha: float,
 
     if shape.kind == "train":
         n = num_clients(mesh)
-        gamma = scaling_factor("sfedlora", alpha, rank, n)
         opt_cfg = OptimizerConfig(name="sgd", lr=5e-3)
         # the REAL trainer engine (core/federated.py run_chunk), lowered with
         # explicit shardings — one scanned round per chunk for compile parity
         step = make_run_chunk(model, strategy="fedsa", opt_cfg=opt_cfg,
-                              gamma=gamma, jit=False)
+                              jit=False)
 
         def make_state():
             from repro.optim.optimizers import make_optimizer
@@ -110,7 +108,11 @@ def _build(arch: str, shape_name: str, mesh, rank: int, alpha: float,
                 lambda x: jnp.broadcast_to(x, (n,) + x.shape), opt1)
             return params, lora, opt
 
-        params_s, lora_s, opt_s = jax.eval_shape(make_state)
+        params_s, lora_tree_s, opt_s = jax.eval_shape(make_state)
+        # the engine state is an AdapterSet: the scaling factor is static
+        # treedef config derived from the LoRAConfig, so shape-level specs
+        # only wrap the A/B tree
+        lora_s = AdapterSet.from_config(lcfg, n_clients=n, lora=lora_tree_s)
         batch = model.input_specs(shape, n_clients=n)
         # (chunk_rounds=1, N, local_steps=1, per-client batch, ...)
         batch = {k: jax.ShapeDtypeStruct((1, v.shape[0], 1) + v.shape[1:],

@@ -1,33 +1,72 @@
-"""Batched serving with merged LoRA adapters (zero inference latency — the
-paper's deployment property).
+"""Multi-tenant batched LoRA serving from an AdapterBank.
 
+One compiled decode step serves every tenant at once: each request carries an
+adapter id, the step gathers that request's (padded, scale-folded) adapter
+from the bank on device, and the batched dispatch path applies one adapter
+per batch row — heterogeneous-rank adapters from N federated clients decode
+in a single batch, no per-tenant recompiles, no weight merging.
+
+  # fresh random adapters (API smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --steps 16 --batch 4
+      --steps 16 --batch 8 --clients 4
+
+  # serve a TRAINED federated checkpoint (every client becomes a tenant):
+  PYTHONPATH=src python -m repro.launch.train --reduced --save /tmp/ck.npz ...
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --resume /tmp/ck.npz --steps 16 --batch 8
+
+The classic zero-overhead single-tenant path (merge one client's adapters
+into the base weights) remains available via ``--merge CLIENT``.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.io import load_adapter_state
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LoRAConfig
-from repro.core.lora import init_lora, merge_lora
-from repro.core.scaling import scaling_factor
+from repro.core.lora import AdapterBank, AdapterSet, init_adapter_set
 from repro.models.api import build_model
 
 
-def generate(model, params, prompt, steps: int, max_len: int):
-    """Greedy decode ``steps`` tokens after the prompt (prefill via decode)."""
+@functools.lru_cache(maxsize=None)
+def _jit_decode_step(model):
+    """One jitted decode step per Model instance: ``model.decode_step`` is
+    a fresh bound-method object on every attribute access, so an inline
+    ``jax.jit(model.decode_step)`` would build a new executable cache per
+    call and recompile every time the generator is re-entered."""
+    return jax.jit(model.decode_step)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_banked_step(model):
+    """One jitted bank-gathering decode step per Model instance."""
+    @jax.jit
+    def step(params, cache, tok, pos, bank, ids):
+        return model.decode_step(params, cache, tok, pos,
+                                 adapters=bank.gather(ids))
+    return step
+
+
+def generate(model, params, prompt, steps: int, max_len: int, adapters=None):
+    """Greedy decode ``steps`` tokens after the prompt (prefill via decode).
+
+    ``adapters``: None (base / merged weights), a single AdapterSet, or a
+    ``batched`` one from ``AdapterBank.gather`` — the signature is uniform
+    because the adapters travel as one value."""
     b, p = prompt.shape
     cache = model.init_cache(b, max_len)
-    step = jax.jit(model.decode_step)
+    step = _jit_decode_step(model)
     tok = prompt[:, :1]
     out = [tok]
     for t in range(p + steps - 1):
-        logits, cache = step(params, cache, tok, jnp.full((b,), t))
+        logits, cache = step(params, cache, tok, jnp.full((b,), t),
+                             adapters)
         nxt = (prompt[:, t + 1:t + 2] if t + 1 < p
                else jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
         out.append(nxt)
@@ -35,32 +74,103 @@ def generate(model, params, prompt, steps: int, max_len: int):
     return jnp.concatenate(out, axis=1)
 
 
+def generate_banked(model, params, bank: AdapterBank, adapter_ids, prompt,
+                    steps: int, max_len: int):
+    """Multi-tenant greedy decode: row i of ``prompt`` is served with
+    adapter ``adapter_ids[i]``.  The gather happens INSIDE the compiled
+    step, so one executable covers every tenant mix (ids are traced)."""
+    b, p = prompt.shape
+    cache = model.init_cache(b, max_len)
+    step = _jit_banked_step(model)
+    ids = jnp.asarray(adapter_ids, jnp.int32)
+    tok = prompt[:, :1]
+    out = [tok]
+    for t in range(p + steps - 1):
+        logits, cache = step(params, cache, tok, jnp.full((b,), t), bank, ids)
+        nxt = (prompt[:, t + 1:t + 2] if t + 1 < p
+               else jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
+        out.append(nxt)
+        tok = nxt
+    return jnp.concatenate(out, axis=1)
+
+
+def build_bank(args, cfg, model):
+    """AdapterBank from a checkpoint (``--resume``) or fresh random sets.
+
+    Returns (base_params, bank).  With ``--resume`` the bank registers the
+    TRAINED stacked AdapterSet — per-client gammas fold into B, rank masks
+    carry over — so serving uses exactly what training produced (and the
+    checkpoint's base weights serve; nothing is initialized from scratch)."""
+    if args.resume:
+        lcfg = LoRAConfig(rank=args.rank, alpha=args.alpha,
+                          scaling=args.scaling, targets=cfg.lora_targets)
+        base, aset = load_adapter_state(args.resume, lora_cfg=lcfg)
+        return base, AdapterBank.from_adapter_set(aset)
+    params = model.init(jax.random.key(0))
+    ranks = ([int(r) for r in args.ranks.split(",")] if args.ranks
+             else [args.rank] * args.clients)
+    sets = [init_adapter_set(
+        params, jax.random.fold_in(jax.random.key(1), k),
+        LoRAConfig(rank=r, alpha=args.alpha, scaling=args.scaling,
+                   targets=cfg.lora_targets),
+        n_clients=len(ranks)) for k, r in enumerate(ranks)]
+    return params, AdapterBank.from_sets(sets)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--ranks", default="",
+                    help="comma-separated per-tenant ranks for a fresh "
+                         "mixed-rank bank, e.g. 4,8,16")
+    ap.add_argument("--alpha", type=float, default=8.0)
+    ap.add_argument("--scaling", default="sfedlora",
+                    choices=("lora", "rslora", "sfedlora", "za", "zb"))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="tenant count for a fresh bank (ignored with "
+                         "--resume: every checkpointed client serves)")
+    ap.add_argument("--resume", default=None,
+                    help="federated checkpoint (.npz) to serve: restores "
+                         "the trained AdapterSet — gammas and rank mask "
+                         "included — and registers every client in the bank")
+    ap.add_argument("--merge", type=int, default=None, metavar="CLIENT",
+                    help="classic single-tenant path: merge this client's "
+                         "adapters into the base weights (zero serving "
+                         "overhead) instead of banked decode")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-    lora = init_lora(params, jax.random.key(1),
-                     LoRAConfig(rank=args.rank, targets=cfg.lora_targets))
-    gamma = scaling_factor("sfedlora", 8.0, args.rank, args.clients)
-    merged = merge_lora(params, lora, gamma)   # deploy-time merge
+    base, bank = build_bank(args, cfg, model)
     prompt = jax.random.randint(jax.random.key(2), (args.batch, 4), 0,
                                 cfg.vocab_size)
+    max_len = 4 + args.steps
+
+    if args.merge is not None:
+        merged = bank.adapter(args.merge).merge(base)
+        t0 = time.time()
+        seq = generate(model, merged, prompt, args.steps, max_len)
+        dt = time.time() - t0
+        print(f"# {args.arch} merged tenant {args.merge}: "
+              f"batch={args.batch} steps={args.steps}  "
+              f"{dt*1000/args.steps:.1f} ms/token")
+        print(seq[:, :12])
+        return seq
+
+    ids = jnp.arange(args.batch) % bank.size
     t0 = time.time()
-    seq = generate(model, merged, prompt, args.steps, 4 + args.steps)
+    seq = generate_banked(model, base, bank, ids, prompt, args.steps, max_len)
     dt = time.time() - t0
-    print(f"# {args.arch} merged-LoRA decode: batch={args.batch} "
-          f"steps={args.steps}  {dt*1000/args.steps:.1f} ms/token (CPU)")
+    print(f"# {args.arch} banked decode: {bank.size} tenants "
+          f"(ranks {','.join(str(r) for r in bank.ranks)}), "
+          f"batch={args.batch} steps={args.steps}  "
+          f"{dt*1000/args.steps:.1f} ms/token")
     print(seq[:, :12])
     return seq
 

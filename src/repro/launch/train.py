@@ -105,7 +105,8 @@ def main(argv=None):
     if args.resume:
         tr.restore(args.resume)
         print(f"# resumed from {args.resume} at round {tr.round_idx}")
-    gamma_str = (f"gamma={tr.gamma:.4f} rank={args.rank}" if ranks is None
+    aset = tr.adapters     # scaling factors travel with the state
+    gamma_str = (f"gamma={aset.gamma:.4f} rank={args.rank}" if ranks is None
                  else "gammas=" + ",".join(f"{g:.3f}" for g in tr.gammas)
                  + f" ranks={args.ranks}")
     print(f"# {args.arch}{' (reduced)' if args.reduced else ''}  "

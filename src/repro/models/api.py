@@ -6,9 +6,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.lora import as_adapter_set
 from repro.kernels import dispatch
 from repro.models.layers import norm_params, apply_norm
-from repro.models.transformer import (apply_stack, decode_stack, init_stack,
+from repro.models.transformer import (apply_stack, batched_scan_layout,
+                                      decode_stack, init_stack,
                                       init_stack_cache)
 
 PATCH_EMBED_DIM = 1152   # SigLIP stub output width (arXiv:2407.07726)
@@ -68,8 +70,26 @@ class Model:
                            causal=False, pattern=("attn",))
         return apply_norm(cfg, h, enc, "encfinal")
 
-    def forward(self, params, batch, lora=None, gamma: float = 0.0):
-        """Full-sequence forward.  Returns (logits, aux_loss)."""
+    @staticmethod
+    def _stack_adapters(adapters):
+        """Resolve an AdapterSet to the prepared "stack" subtree the block
+        machinery consumes: rank mask applied, gamma folded into B (the one
+        place scaling meets the model), banked per-request trees reordered
+        for the layer scans."""
+        if adapters is None:
+            return None
+        prepared = adapters.prepared()
+        tree = (prepared.lora or {}).get("stack")
+        if adapters.batched and tree:
+            tree = batched_scan_layout(tree)
+        return tree
+
+    def forward(self, params, batch, adapters=None, *, lora=None, gamma=None):
+        """Full-sequence forward.  Returns (logits, aux_loss).
+
+        ``adapters`` is an :class:`repro.core.lora.AdapterSet` (or None for
+        the base model).  ``lora=``/``gamma=`` are deprecated shims."""
+        adapters = as_adapter_set(adapters, lora=lora, gamma=gamma)
         cfg = self.cfg
         with dispatch.scope(cfg.use_pallas):
             x = self._embed(params, batch)
@@ -78,7 +98,7 @@ class Model:
             enc_out = (self._encode(params, batch)
                        if cfg.family == "audio" else None)
             x, aux = apply_stack(cfg, params["stack"], x,
-                                 lora=(lora or {}).get("stack"), gamma=gamma,
+                                 adapters=self._stack_adapters(adapters),
                                  positions=positions, enc_out=enc_out,
                                  causal=cfg.family != "encoder")
             x = apply_norm(cfg, x, params, "final")
@@ -87,9 +107,13 @@ class Model:
             logits = x @ head.astype(x.dtype)
         return logits, aux
 
-    def loss(self, params, batch, lora=None, gamma: float = 0.0):
+    def loss(self, params, batch, adapters=None, *, lora=None, gamma=None):
         """Next-token CE over the text segment (+ MoE aux).  Encoder-only
-        models use MLM-style loss (mask every 5th token)."""
+        models use MLM-style loss (mask every 5th token).
+
+        ``adapters`` is an AdapterSet; ``lora=``/``gamma=`` are deprecated
+        shims."""
+        adapters = as_adapter_set(adapters, lora=lora, gamma=gamma)
         cfg = self.cfg
         tokens = batch["tokens"]
         if cfg.family == "encoder":
@@ -98,7 +122,7 @@ class Model:
             masked_pos = (jnp.arange(s) % 5) == 2
             inp = jnp.where(masked_pos[None, :], mask_id, tokens)
             logits, aux = self.forward(params, {**batch, "tokens": inp},
-                                       lora=lora, gamma=gamma)
+                                       adapters=adapters)
             lf = logits.astype(jnp.float32)
             lse = jax.scipy.special.logsumexp(lf, axis=-1)
             ll = jnp.take_along_axis(lf, tokens[..., None], axis=-1)[..., 0]
@@ -107,8 +131,8 @@ class Model:
             return ce + aux, {"ce": ce, "aux": aux}
         from repro.sharding import opts
         if opts.enabled("chunked_ce"):
-            return self._loss_chunked(params, batch, lora, gamma)
-        logits, aux = self.forward(params, batch, lora=lora, gamma=gamma)
+            return self._loss_chunked(params, batch, adapters)
+        logits, aux = self.forward(params, batch, adapters=adapters)
         s_text = tokens.shape[1]
         logits = logits[:, -s_text:][:, :-1]
         labels = tokens[:, 1:]
@@ -118,7 +142,7 @@ class Model:
         ce = (lse - ll).mean()
         return ce + aux, {"ce": ce, "aux": aux}
 
-    def _loss_chunked(self, params, batch, lora, gamma, chunk: int = 512):
+    def _loss_chunked(self, params, batch, adapters, chunk: int = 512):
         """CE computed in sequence chunks: the full (b, s, V) logits tensor
         never materializes — the head matmul + logsumexp + label gather run
         per chunk inside a scan (beyond-paper memory-term optimization)."""
@@ -131,7 +155,7 @@ class Model:
             enc_out = (self._encode(params, batch)
                        if cfg.family == "audio" else None)
             x, aux = apply_stack(cfg, params["stack"], x,
-                                 lora=(lora or {}).get("stack"), gamma=gamma,
+                                 adapters=self._stack_adapters(adapters),
                                  positions=positions, enc_out=enc_out,
                                  causal=cfg.family != "encoder")
             x = apply_norm(cfg, x, params, "final")
@@ -169,17 +193,22 @@ class Model:
         cross = cfg.encoder_frames if cfg.family == "audio" else 0
         return init_stack_cache(cfg, batch, max_len, dtype, cross_len=cross)
 
-    def decode_step(self, params, cache, token, pos, lora=None,
-                    gamma: float = 0.0):
+    def decode_step(self, params, cache, token, pos, adapters=None, *,
+                    lora=None, gamma=None):
         """One token: token (b,1) int32, pos (b,) absolute position.
-        Returns (logits (b,1,V), new_cache)."""
+        Returns (logits (b,1,V), new_cache).
+
+        ``adapters`` may be a single AdapterSet or a ``batched`` one from
+        ``AdapterBank.gather`` (one adapter per batch row — multi-tenant
+        serving); ``lora=``/``gamma=`` are deprecated shims."""
+        adapters = as_adapter_set(adapters, lora=lora, gamma=gamma)
         cfg = self.cfg
         with dispatch.scope(cfg.use_pallas):
             x = jnp.take(params["embed"], token,
                          axis=0).astype(jnp.dtype(cfg.dtype))
             x, new_cache = decode_stack(cfg, params["stack"], cache, x, pos,
-                                        lora=(lora or {}).get("stack"),
-                                        gamma=gamma)
+                                        adapters=self._stack_adapters(
+                                            adapters))
             x = apply_norm(cfg, x, params, "final")
             head = (params["embed"].T if cfg.tie_embeddings
                     else params["lm_head"])

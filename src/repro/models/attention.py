@@ -49,18 +49,18 @@ def attn_params(cfg, key, *, cross: bool = False, d_model=None):
     return p
 
 
-def _project_qkv(cfg, params, x, kv_x=None, lora=None, gamma=0.0, positions=None,
+def _project_qkv(cfg, params, x, kv_x=None, adapters=None, positions=None,
                  kv_positions=None, use_rope=True):
     """Returns q (b,s,h,hd), k/v (b,t,kh,hd) with RoPE + qk-norm applied."""
     kv_x = x if kv_x is None else kv_x
     b, s, _ = x.shape
     t = kv_x.shape[1]
-    lq = (lora or {}).get("q")
-    lk = (lora or {}).get("k")
-    lv = (lora or {}).get("v")
-    q = linear(x, params["q"], lq, gamma).reshape(b, s, cfg.num_heads, cfg.head_dim)
-    k = linear(kv_x, params["k"], lk, gamma).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
-    v = linear(kv_x, params["v"], lv, gamma).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    lq = (adapters or {}).get("q")
+    lk = (adapters or {}).get("k")
+    lv = (adapters or {}).get("v")
+    q = linear(x, params["q"], lq).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = linear(kv_x, params["k"], lk).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(kv_x, params["v"], lv).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = rms_norm(q, params["q_norm_scale"])
         k = rms_norm(k, params["k_norm_scale"])
@@ -174,7 +174,7 @@ def blockwise_attention(cfg, q, k, v, positions_q, positions_kv, *, causal,
     return out.astype(q.dtype)
 
 
-def attention_fullseq(cfg, params, x, *, causal=True, lora=None, gamma=0.0,
+def attention_fullseq(cfg, params, x, *, causal=True, adapters=None,
                       positions=None, kv_x=None, use_rope=True, window=None):
     """Full-sequence attention (training / prefill / encoder / cross)."""
     b, s, _ = x.shape
@@ -182,7 +182,7 @@ def attention_fullseq(cfg, params, x, *, causal=True, lora=None, gamma=0.0,
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     kv_pos = (positions if kv_x is None else
               jnp.broadcast_to(jnp.arange(kv_x.shape[1])[None, :], (b, kv_x.shape[1])))
-    q, k, v = _project_qkv(cfg, params, x, kv_x=kv_x, lora=lora, gamma=gamma,
+    q, k, v = _project_qkv(cfg, params, x, kv_x=kv_x, adapters=adapters,
                            positions=positions, kv_positions=kv_pos,
                            use_rope=use_rope)
     win = window if window is not None else cfg.attn_window
@@ -195,8 +195,8 @@ def attention_fullseq(cfg, params, x, *, causal=True, lora=None, gamma=0.0,
         mask = make_mask(positions, kv_pos, causal=causal,
                          window=win if causal else None)
         out = attention_core(cfg, q, k, v, mask)
-    lo = (lora or {}).get("o")
-    return linear(out.reshape(b, s, -1), params["o"], lo, gamma)
+    lo = (adapters or {}).get("o")
+    return linear(out.reshape(b, s, -1), params["o"], lo)
 
 
 # ----------------------------------------------------------------- KV cache decode
@@ -211,14 +211,14 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype):
     }
 
 
-def attention_decode(cfg, params, x, cache, pos, *, lora=None, gamma=0.0):
+def attention_decode(cfg, params, x, cache, pos, *, adapters=None):
     """One-token decode.  x (b,1,d); pos (b,) current absolute position.
 
     Returns (out (b,1,d), new_cache).  Ring-buffer writes for sliding window.
     """
     b = x.shape[0]
     size = cache["k"].shape[1]
-    q, k, v = _project_qkv(cfg, params, x, lora=lora, gamma=gamma,
+    q, k, v = _project_qkv(cfg, params, x, adapters=adapters,
                            positions=pos[:, None], kv_positions=pos[:, None])
     slot = pos % size                                   # (b,)
     bidx = jnp.arange(b)
@@ -229,6 +229,6 @@ def attention_decode(cfg, params, x, cache, pos, *, lora=None, gamma=0.0):
     mask = make_mask(pos[:, None], new_pos, causal=True,
                      window=cfg.attn_window, valid_kv=valid)
     out = attention_core(cfg, q, new_k, new_v, mask)
-    lo = (lora or {}).get("o")
-    y = linear(out.reshape(b, 1, -1), params["o"], lo, gamma)
+    lo = (adapters or {}).get("o")
+    y = linear(out.reshape(b, 1, -1), params["o"], lo)
     return y, {"k": new_k, "v": new_v, "pos": new_pos}

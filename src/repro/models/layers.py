@@ -81,8 +81,8 @@ def mlp_params(cfg, key, d_in: int, d_ff: int):
     return p
 
 
-def mlp_apply(cfg, params, x, lora=None, gamma: float = 0.0):
-    """Gated MLP.  ``lora``/``gamma`` reserved for adapter-on-mlp variants."""
+def mlp_apply(cfg, params, x, adapters=None):
+    """Gated MLP.  ``adapters`` reserved for adapter-on-mlp variants."""
     up = x @ params["w_up"]
     if cfg.mlp_variant == "swiglu":
         h = jax.nn.silu(x @ params["w_gate"]) * up
@@ -93,11 +93,15 @@ def mlp_apply(cfg, params, x, lora=None, gamma: float = 0.0):
     return h @ params["w_down"]
 
 
-def linear(x, w, lora=None, gamma: float = 0.0):
-    """y = x W (+ gamma * (x A^T) B^T) — the LoRA-aware projection primitive.
+def linear(x, w, adapters=None):
+    """y = x W (+ (x A^T) B^T) — the LoRA-aware projection primitive.
 
-    ``lora`` is ``{"a": (r, d_in), "b": (d_out, r)}`` or None.  Routed through
-    ``repro.kernels.dispatch`` so configs with ``use_pallas`` hit the fused
-    Pallas kernel (with fused custom-VJP backward) instead of three XLA GEMMs.
+    ``adapters`` is ``{"a": (r, d_in), "b": (d_out, r)}`` or None — an
+    adapter node of an ``AdapterSet`` already in prepared form (the scaling
+    factor folded into B, rank mask applied), so the projection itself is
+    scale-free.  Routed through ``repro.kernels.dispatch`` so configs with
+    ``use_pallas`` hit the fused Pallas kernel (with fused custom-VJP
+    backward) instead of three XLA GEMMs; leaves with a leading request dim
+    (``AdapterBank.gather``) take the batched multi-tenant path.
     """
-    return lora_linear(x, w, lora, gamma)
+    return lora_linear(x, w, adapters, 1.0)

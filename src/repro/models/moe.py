@@ -45,8 +45,12 @@ def moe_params(cfg, key):
     return p
 
 
-def moe_apply(cfg, params, x):
-    """x (b, s, d) -> (out (b, s, d), aux_loss scalar)."""
+def moe_apply(cfg, params, x, adapters=None):
+    """x (b, s, d) -> (out (b, s, d), aux_loss scalar).
+
+    ``adapters`` (an AdapterSet node in prepared form) is accepted for API
+    uniformity with the other block kinds and reserved for adapter-on-expert
+    variants — no current config targets expert projections."""
     from repro.sharding.opts import enabled
     if enabled("moe_grouped"):
         return _moe_apply_grouped(cfg, params, x)

@@ -69,11 +69,11 @@ def rglru_scan(a, b, h0=None):
     return h
 
 
-def rglru_apply_fullseq(cfg, params, x, lora=None, gamma=0.0):
+def rglru_apply_fullseq(cfg, params, x, adapters=None):
     """x (b,s,d) -> (b,s,d).  LoRA (if given) adapts wx / wy projections."""
     from repro.models.layers import linear
-    xb = linear(x, params["wx"], (lora or {}).get("wx"), gamma)
-    yb = linear(x, params["wy"], (lora or {}).get("wy"), gamma)
+    xb = linear(x, params["wx"], (adapters or {}).get("wx"))
+    yb = linear(x, params["wy"], (adapters or {}).get("wy"))
     xb, _ = _causal_conv(xb, params["conv"])
     xf = xb.astype(jnp.float32)
     a, b = _gates(params, xf)
@@ -88,11 +88,11 @@ def rglru_init_cache(cfg, batch, dtype):
             "conv_tail": jnp.zeros((batch, CONV_WIDTH - 1, dr), dtype)}
 
 
-def rglru_apply_decode(cfg, params, x, cache, pos, lora=None, gamma=0.0):
+def rglru_apply_decode(cfg, params, x, cache, pos, adapters=None):
     """One-token step.  x (b,1,d)."""
     from repro.models.layers import linear
-    xb = linear(x, params["wx"], (lora or {}).get("wx"), gamma)
-    yb = linear(x, params["wy"], (lora or {}).get("wy"), gamma)
+    xb = linear(x, params["wx"], (adapters or {}).get("wx"))
+    yb = linear(x, params["wy"], (adapters or {}).get("wy"))
     xb, new_tail = _causal_conv(xb, params["conv"], cache["conv_tail"])
     xf = xb[:, 0].astype(jnp.float32)
     a, b = _gates(params, xf)

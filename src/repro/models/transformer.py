@@ -86,16 +86,16 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int, dtype,
 
 # ----------------------------------------------------------------- block apply
 
-def _cross_attention(cfg, params, x, ck, cv, lora=None, gamma=0.0):
+def _cross_attention(cfg, params, x, ck, cv, adapters=None):
     """Cross-attention against precomputed encoder K/V (no masking, no RoPE)."""
     b, s, _ = x.shape
-    lq = (lora or {}).get("q")
-    q = linear(x, params["q"], lq, gamma).reshape(b, s, cfg.num_heads,
-                                                  cfg.head_dim)
+    lq = (adapters or {}).get("q")
+    q = linear(x, params["q"], lq).reshape(b, s, cfg.num_heads,
+                                           cfg.head_dim)
     mask = jnp.ones((b, s, ck.shape[1]), bool)
     out = attention_core(cfg, q, ck, cv, mask)
-    return linear(out.reshape(b, s, -1), params["o"], (lora or {}).get("o"),
-                  gamma)
+    return linear(out.reshape(b, s, -1), params["o"],
+                  (adapters or {}).get("o"))
 
 
 def build_cross_kv(cfg, p_cross, enc_out):
@@ -106,10 +106,10 @@ def build_cross_kv(cfg, p_cross, enc_out):
     return k, v
 
 
-def apply_block(cfg, kind, p, x, *, lora=None, gamma=0.0, positions=None,
+def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
                 causal=True, mode="fullseq", cache=None, pos=None,
                 enc_out=None):
-    lora = lora or {}
+    adapters = adapters or {}
     aux = jnp.zeros((), jnp.float32)
     h1 = apply_norm(cfg, x, p, "ln1")
     new_cache = None
@@ -117,12 +117,12 @@ def apply_block(cfg, kind, p, x, *, lora=None, gamma=0.0, positions=None,
     if kind in ("attn", "xattn"):
         if mode == "fullseq":
             a = attention_fullseq(cfg, p["attn"], h1, causal=causal,
-                                  lora=lora.get("attn"), gamma=gamma,
+                                  adapters=adapters.get("attn"),
                                   positions=positions)
         else:
             a, self_cache = attention_decode(
                 cfg, p["attn"], h1, cache["self"] if kind == "xattn" else cache,
-                pos, lora=lora.get("attn"), gamma=gamma)
+                pos, adapters=adapters.get("attn"))
         x = x + a
         if kind == "xattn":
             hx = apply_norm(cfg, x, p, "lnx")
@@ -131,13 +131,15 @@ def apply_block(cfg, kind, p, x, *, lora=None, gamma=0.0, positions=None,
             else:
                 ck, cv = build_cross_kv(cfg, p["cross"], enc_out)
             x = x + _cross_attention(cfg, p["cross"], hx, ck, cv,
-                                     lora=lora.get("cross"), gamma=gamma)
+                                     adapters=adapters.get("cross"))
         h2 = apply_norm(cfg, x, p, "ln2")
         if cfg.moe is not None:
-            mo, aux = moe_apply(cfg, p["moe"], h2)
+            mo, aux = moe_apply(cfg, p["moe"], h2,
+                                adapters=adapters.get("moe"))
             x = x + mo
         else:
-            x = x + mlp_apply(cfg, p["mlp"], h2)
+            x = x + mlp_apply(cfg, p["mlp"], h2,
+                              adapters=adapters.get("mlp"))
         if mode == "decode":
             new_cache = ({"self": self_cache, "cross_k": cache["cross_k"],
                           "cross_v": cache["cross_v"]} if kind == "xattn"
@@ -146,10 +148,10 @@ def apply_block(cfg, kind, p, x, *, lora=None, gamma=0.0, positions=None,
     elif kind == "rglru":
         if mode == "fullseq":
             r = rglru_mod.rglru_apply_fullseq(cfg, p["rglru"], h1,
-                                              lora.get("rglru"), gamma)
+                                              adapters.get("rglru"))
         else:
             r, new_cache = rglru_mod.rglru_apply_decode(
-                cfg, p["rglru"], h1, cache, pos, lora.get("rglru"), gamma)
+                cfg, p["rglru"], h1, cache, pos, adapters.get("rglru"))
         x = x + r
         h2 = apply_norm(cfg, x, p, "ln2")
         x = x + mlp_apply(cfg, p["mlp"], h2)
@@ -157,19 +159,19 @@ def apply_block(cfg, kind, p, x, *, lora=None, gamma=0.0, positions=None,
     elif kind == "mlstm":
         if mode == "fullseq":
             m = xlstm_mod.mlstm_apply_fullseq(cfg, p["mlstm"], h1,
-                                              lora.get("mlstm"), gamma)
+                                              adapters.get("mlstm"))
         else:
             m, new_cache = xlstm_mod.mlstm_apply_decode(
-                cfg, p["mlstm"], h1, cache, pos, lora.get("mlstm"), gamma)
+                cfg, p["mlstm"], h1, cache, pos, adapters.get("mlstm"))
         x = x + m
 
     elif kind == "slstm":
         if mode == "fullseq":
             s_ = xlstm_mod.slstm_apply_fullseq(cfg, p["slstm"], h1,
-                                               lora.get("slstm"), gamma)
+                                               adapters.get("slstm"))
         else:
             s_, new_cache = xlstm_mod.slstm_apply_decode(
-                cfg, p["slstm"], h1, cache, pos, lora.get("slstm"), gamma)
+                cfg, p["slstm"], h1, cache, pos, adapters.get("slstm"))
         x = x + s_
     else:
         raise ValueError(kind)
@@ -221,13 +223,17 @@ def init_stack_cache(cfg, batch, max_len, dtype, *, num_layers=None,
     return out
 
 
-def apply_stack(cfg, stack_params, x, *, lora=None, gamma=0.0, positions=None,
+def apply_stack(cfg, stack_params, x, *, adapters=None, positions=None,
                 causal=True, pattern=None, remat=True, enc_out=None):
-    """Full-sequence forward.  Returns (x, aux_sum)."""
+    """Full-sequence forward.  Returns (x, aux_sum).
+
+    ``adapters`` is the prepared "stack" subtree of an AdapterSet (scaling
+    folded, mask applied); banked per-request trees must be in scan layout
+    (see :func:`batched_scan_layout`)."""
     pattern = pattern or cfg.block_pattern
-    lora = lora or {}
+    adapters = adapters or {}
     rep_p = stack_params.get("repeat", {})
-    rep_lora = lora.get("repeat") or _empty_like_stack(rep_p)
+    rep_lora = adapters.get("repeat") or _empty_like_stack(rep_p)
 
     def one_rep(h, xs):
         ps, los = xs
@@ -238,7 +244,7 @@ def apply_stack(cfg, stack_params, x, *, lora=None, gamma=0.0, positions=None,
         aux = jnp.zeros((), jnp.float32)
         for j, kind in enumerate(pattern):
             h, a = apply_block(cfg, kind, ps[f"p{j}"], h,
-                               lora=los.get(f"p{j}"), gamma=gamma,
+                               adapters=los.get(f"p{j}"),
                                positions=positions, causal=causal,
                                enc_out=enc_out)
             aux = aux + a
@@ -263,8 +269,8 @@ def apply_stack(cfg, stack_params, x, *, lora=None, gamma=0.0, positions=None,
     kinds = _tail_kinds(cfg, pattern, stack_params)
     for i, kind in enumerate(kinds):
         x, a = apply_block(cfg, kind, stack_params["tail"][f"t{i}"], x,
-                           lora=(lora.get("tail") or {}).get(f"t{i}"),
-                           gamma=gamma, positions=positions, causal=causal,
+                           adapters=(adapters.get("tail") or {}).get(f"t{i}"),
+                           positions=positions, causal=causal,
                            enc_out=enc_out)
         aux_total = aux_total + a
     return x, aux_total
@@ -275,20 +281,20 @@ def _tail_kinds(cfg, pattern, stack_params):
     return tuple(pattern[:n_tail])
 
 
-def decode_stack(cfg, stack_params, cache, x, pos, *, lora=None, gamma=0.0,
+def decode_stack(cfg, stack_params, cache, x, pos, *, adapters=None,
                  pattern=None):
     """One-token decode through the stack.  Returns (x, new_cache)."""
     pattern = pattern or cfg.block_pattern
-    lora = lora or {}
+    adapters = adapters or {}
     rep_p = stack_params.get("repeat", {})
-    rep_lora = lora.get("repeat") or _empty_like_stack(rep_p)
+    rep_lora = adapters.get("repeat") or _empty_like_stack(rep_p)
 
     def scan_body(h, xs):
         ps, los, cs = xs
         new_cs = {}
         for j, kind in enumerate(pattern):
             h, _, nc = apply_block(cfg, kind, ps[f"p{j}"], h,
-                                   lora=los.get(f"p{j}"), gamma=gamma,
+                                   adapters=los.get(f"p{j}"),
                                    mode="decode", cache=cs[f"p{j}"], pos=pos)
             new_cs[f"p{j}"] = nc
         return h, new_cs
@@ -303,8 +309,8 @@ def decode_stack(cfg, stack_params, cache, x, pos, *, lora=None, gamma=0.0,
     for i, kind in enumerate(kinds):
         key = f"t{i}"
         x, _, nc = apply_block(cfg, kind, stack_params["tail"][key], x,
-                               lora=(lora.get("tail") or {}).get(key),
-                               gamma=gamma, mode="decode",
+                               adapters=(adapters.get("tail") or {}).get(key),
+                               mode="decode",
                                cache=cache["tail"][key], pos=pos)
         new_cache["tail"][key] = nc
     return x, new_cache
@@ -313,3 +319,20 @@ def decode_stack(cfg, stack_params, cache, x, pos, *, lora=None, gamma=0.0,
 def _empty_like_stack(rep_p):
     """LoRA-free stand-in (no leaves, scans alongside params)."""
     return {k: {} for k in rep_p}
+
+
+def batched_scan_layout(stack_adapters):
+    """Reorder a banked per-request adapter tree for the layer scans.
+
+    ``AdapterBank.gather`` puts the request dim first on every leaf; the
+    repeated blocks scan over their layer dim, which must lead.  Swap the
+    (request, layer) axes on the "repeat" subtree only — tail leaves carry
+    no layer dim and stay request-leading, which is exactly the 3-D
+    per-request shape the dispatch layer's batched path expects."""
+    if not stack_adapters:
+        return stack_adapters
+    out = dict(stack_adapters)
+    rep = stack_adapters.get("repeat")
+    if rep:
+        out["repeat"] = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), rep)
+    return out

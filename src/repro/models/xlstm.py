@@ -35,13 +35,13 @@ def mlstm_params(cfg, key):
     }
 
 
-def _mlstm_qkv(cfg, params, x, lora, gamma):
+def _mlstm_qkv(cfg, params, x, adapters):
     from repro.models.layers import linear
     b, s, _ = x.shape
     h, hd = cfg.num_heads, cfg.head_dim
-    q = linear(x, params["q"], (lora or {}).get("q"), gamma).reshape(b, s, h, hd)
-    k = linear(x, params["k"], (lora or {}).get("k"), gamma).reshape(b, s, h, hd)
-    v = linear(x, params["v"], (lora or {}).get("v"), gamma).reshape(b, s, h, hd)
+    q = linear(x, params["q"], (adapters or {}).get("q")).reshape(b, s, h, hd)
+    k = linear(x, params["k"], (adapters or {}).get("k")).reshape(b, s, h, hd)
+    v = linear(x, params["v"], (adapters or {}).get("v")).reshape(b, s, h, hd)
     return (q.astype(jnp.float32), k.astype(jnp.float32) * hd ** -0.5,
             v.astype(jnp.float32))
 
@@ -49,12 +49,12 @@ def _mlstm_qkv(cfg, params, x, lora, gamma):
 MLSTM_CHUNK = 256
 
 
-def mlstm_apply_fullseq(cfg, params, x, lora=None, gamma=0.0):
+def mlstm_apply_fullseq(cfg, params, x, adapters=None):
     """Stabilized chunkwise-parallel form: within-chunk O(C^2) on the MXU,
     across-chunk recurrent matrix-memory carry (scan).  x (b,s,d)."""
     b, s, d = x.shape
     h, hd = cfg.num_heads, cfg.head_dim
-    q, k, v = _mlstm_qkv(cfg, params, x, lora, gamma)
+    q, k, v = _mlstm_qkv(cfg, params, x, adapters)
     xf = x.astype(jnp.float32)
     log_i = xf @ params["w_i"].astype(jnp.float32)                       # (b,s,h)
     log_f = jax.nn.log_sigmoid(xf @ params["w_f"].astype(jnp.float32)
@@ -125,10 +125,10 @@ def mlstm_init_cache(cfg, batch, dtype):
             "m": jnp.full((batch, h), -1e30, jnp.float32)}
 
 
-def mlstm_apply_decode(cfg, params, x, cache, pos, lora=None, gamma=0.0):
+def mlstm_apply_decode(cfg, params, x, cache, pos, adapters=None):
     """Recurrent matrix-memory step.  x (b,1,d)."""
     b = x.shape[0]
-    q, k, v = _mlstm_qkv(cfg, params, x, lora, gamma)
+    q, k, v = _mlstm_qkv(cfg, params, x, adapters)
     q, k, v = q[:, 0], k[:, 0], v[:, 0]                                   # (b,h,hd)
     xf = x[:, 0].astype(jnp.float32)
     log_i = xf @ params["w_i"].astype(jnp.float32)                        # (b,h)
@@ -202,12 +202,14 @@ def _slstm_gate_inputs(params, x):
     return jnp.stack(gates, axis=-2)          # (b, s, 4, d)
 
 
-def slstm_apply_fullseq(cfg, params, x, lora=None, gamma=0.0):
+def slstm_apply_fullseq(cfg, params, x, adapters=None):
     from repro.models.layers import linear
     b, s, d = x.shape
     gi = _slstm_gate_inputs(params, x)
-    if lora is not None and "z" in lora:
-        gi = gi.at[:, :, 0].add(gamma * ((x @ lora["z"]["a"].T) @ lora["z"]["b"].T))
+    if adapters is not None and "z" in adapters:
+        # gate-input adapter (prepared form: scale already folded into B)
+        za, zb = adapters["z"]["a"], adapters["z"]["b"]
+        gi = gi.at[:, :, 0].add((x @ za.T) @ zb.T)
     carry = (jnp.zeros((b, d), jnp.float32),) * 2 + (
         jnp.full((b, d), 1e-6, jnp.float32), jnp.full((b, d), -1e30, jnp.float32))
     step = lambda c, xt: _slstm_step(cfg, params, c, xt)
@@ -223,7 +225,7 @@ def slstm_init_cache(cfg, batch, dtype):
             "m": jnp.full((batch, d), -1e30, jnp.float32)}
 
 
-def slstm_apply_decode(cfg, params, x, cache, pos, lora=None, gamma=0.0):
+def slstm_apply_decode(cfg, params, x, cache, pos, adapters=None):
     gi = _slstm_gate_inputs(params, x)[:, 0]  # (b, 4, d)
     carry = (cache["h"], cache["c"], cache["n"], cache["m"])
     (h, c, n, m), _ = _slstm_step(cfg, params, carry, gi)

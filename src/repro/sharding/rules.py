@@ -118,6 +118,14 @@ def lora_spec(path_keys, shape, mesh, *, client_dim: bool) -> P:
 
 
 def lora_sharding(lora, mesh, *, client_dim=True):
+    """Shardings for a LoRA tree — or an :class:`AdapterSet`, which comes
+    back as an AdapterSet of shardings (same treedef: gamma/rank mask are
+    static aux data, so only the A/B leaves need placements)."""
+    from repro.core.lora import AdapterSet
+    if isinstance(lora, AdapterSet):
+        import dataclasses
+        return dataclasses.replace(
+            lora, lora=lora_sharding(lora.lora, mesh, client_dim=client_dim))
     return tree_specs(lora, mesh,
                       lambda p, s, m: lora_spec(p, s, m,
                                                 client_dim=client_dim))

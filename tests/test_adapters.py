@@ -1,0 +1,389 @@
+"""First-class adapter API: AdapterSet/AdapterBank units, deprecation shims,
+LoRA-aware KV-cache decode, multi-tenant banked serving, and train-vs-serve
+checkpoint parity."""
+import dataclasses
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (load_adapter_state, save_federated_state)
+from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.core.federated import (FederatedTrainer, make_fed_round_step,
+                                  make_run_chunk)
+from repro.core.lora import (AdapterBank, AdapterSet, adapter_rank,
+                             init_adapter_set, init_lora, pad_rank_tree)
+from repro.data.synthetic import FederatedDataset
+from repro.kernels import dispatch
+from repro.models.api import build_model
+from repro.optim.optimizers import make_optimizer
+
+
+def _cfg(use_pallas=False, num_layers=2):
+    return ModelConfig(name="aset", family="dense", num_layers=num_layers,
+                       d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                       d_ff=64, vocab_size=64, use_pallas=use_pallas)
+
+
+def _nonzero(aset, seed=9, scale=0.03):
+    """Give B (zero-init) real values so adapter effects are visible."""
+    return dataclasses.replace(aset, lora=jax.tree.map(
+        lambda x: x + scale * jax.random.normal(jax.random.key(seed), x.shape),
+        aset.lora))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg()
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+# ------------------------------------------------------------- AdapterSet
+
+def test_adapter_set_pytree_roundtrip(tiny):
+    _, model, params = tiny
+    aset = init_adapter_set(params, jax.random.key(1), LoRAConfig(rank=4),
+                            n_clients=3)
+    leaves, td = jax.tree.flatten(aset)
+    back = jax.tree.unflatten(td, leaves)
+    assert back.gamma == aset.gamma and back.rank == 4
+    assert back.alpha == aset.alpha
+    # static gamma lives in the treedef: different gammas, different treedefs
+    other = dataclasses.replace(aset, gamma=1.0)
+    assert jax.tree.structure(other) != td
+
+
+def test_adapter_set_uniform_collapse(tiny):
+    _, model, params = tiny
+    lora = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    uniform = AdapterSet(lora=lora, gamma=(2.0, 2.0, 2.0))
+    assert isinstance(uniform.gamma, float) and uniform.gamma == 2.0
+    mixed = AdapterSet(lora=lora, gamma=(1.0, 2.0))
+    assert not isinstance(mixed.gamma, float)
+    # an all-ones rank mask masks nothing -> canonicalized away entirely
+    assert AdapterSet(lora=lora, rank_mask=jnp.ones((3, 4))).rank_mask is None
+    assert AdapterSet(lora=lora,
+                      rank_mask=jnp.asarray([[1., 1., 0., 0.]])
+                      ).rank_mask is not None
+
+
+def test_fold_gamma_static_and_traced(tiny):
+    _, model, params = tiny
+    aset = _nonzero(init_adapter_set(params, jax.random.key(1),
+                                     LoRAConfig(rank=4)))
+    folded = dataclasses.replace(aset, gamma=2.5).fold_gamma()
+    assert folded.gamma == 1.0
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(aset.lora)[0],
+            jax.tree_util.tree_flatten_with_path(folded.lora)[0]):
+        name = pa[-1].key
+        ref = np.asarray(a) * (2.5 if name == "b" else 1.0)
+        np.testing.assert_array_equal(np.asarray(b), ref)
+    # traced gamma folds under jit and the model still sees a static scale
+    out = jax.jit(lambda s, g: dataclasses.replace(
+        s, gamma=g).fold_gamma().gamma)(aset, jnp.float32(3.0))
+    assert float(out) == 1.0
+
+
+def test_stack_unstack_roundtrip(tiny):
+    _, model, params = tiny
+    s1 = _nonzero(init_adapter_set(params, jax.random.key(1),
+                                   LoRAConfig(rank=4)), seed=1)
+    s2 = _nonzero(init_adapter_set(params, jax.random.key(2),
+                                   LoRAConfig(rank=4, alpha=4.0)), seed=2)
+    stacked = AdapterSet.stack([s1, s2])
+    assert jax.tree.leaves(stacked.lora)[0].shape[0] == 2
+    u1, u2 = stacked.unstack()
+    for a, b in zip(jax.tree.leaves(u1.lora), jax.tree.leaves(s1.lora)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # mixed ranks refuse to stack raw — the bank handles padding
+    s8 = init_adapter_set(params, jax.random.key(3), LoRAConfig(rank=8))
+    with pytest.raises(ValueError, match="uniform ranks"):
+        AdapterSet.stack([s1, s8])
+    bank = AdapterBank.from_sets([s1, s8])
+    assert bank.ranks == (4, 8) and adapter_rank(bank.lora) == 8
+
+
+def test_pad_rank_tree_exact(tiny):
+    """Zero rank padding is exact: padded forward == unpadded forward."""
+    _, model, params = tiny
+    aset = _nonzero(init_adapter_set(params, jax.random.key(1),
+                                     LoRAConfig(rank=4), n_clients=2))
+    toks = jax.random.randint(jax.random.key(5), (2, 8), 0, 64)
+    ref, _ = model.forward(params, {"tokens": toks}, adapters=aset)
+    padded = dataclasses.replace(aset, lora=pad_rank_tree(aset.lora, 16),
+                                 rank=16)
+    out, _ = model.forward(params, {"tokens": toks}, adapters=padded)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_merge_equals_runtime(tiny):
+    _, model, params = tiny
+    aset = _nonzero(init_adapter_set(params, jax.random.key(1),
+                                     LoRAConfig(rank=4), n_clients=3))
+    toks = jax.random.randint(jax.random.key(6), (2, 8), 0, 64)
+    runtime, _ = model.forward(params, {"tokens": toks}, adapters=aset)
+    merged, _ = model.forward(aset.merge(params), {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(runtime), np.asarray(merged),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- deprecation shims
+
+@pytest.mark.deprecation_shim
+def test_forward_loss_decode_legacy_kwargs_warn_and_match(tiny):
+    """lora=/gamma= shims emit DeprecationWarning and are bit-identical to
+    the adapters= path."""
+    _, model, params = tiny
+    aset = _nonzero(init_adapter_set(params, jax.random.key(1),
+                                     LoRAConfig(rank=4)))
+    toks = jax.random.randint(jax.random.key(7), (2, 8), 0, 64)
+    gamma = 1.7
+    new_aset = dataclasses.replace(aset, gamma=gamma)
+
+    ref_fwd, _ = model.forward(params, {"tokens": toks}, adapters=new_aset)
+    with pytest.warns(DeprecationWarning):
+        old_fwd, _ = model.forward(params, {"tokens": toks}, lora=aset.lora,
+                                   gamma=gamma)
+    np.testing.assert_array_equal(np.asarray(ref_fwd), np.asarray(old_fwd))
+
+    ref_loss, _ = model.loss(params, {"tokens": toks}, adapters=new_aset)
+    with pytest.warns(DeprecationWarning):
+        old_loss, _ = model.loss(params, {"tokens": toks}, lora=aset.lora,
+                                 gamma=gamma)
+    assert float(ref_loss) == float(old_loss)
+
+    cache = model.init_cache(2, 8)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    ref_dec, _ = model.decode_step(params, cache, tok, pos, adapters=new_aset)
+    with pytest.warns(DeprecationWarning):
+        old_dec, _ = model.decode_step(params, cache, tok, pos,
+                                       lora=aset.lora, gamma=gamma)
+    np.testing.assert_array_equal(np.asarray(ref_dec), np.asarray(old_dec))
+
+
+@pytest.mark.deprecation_shim
+def test_engine_legacy_gamma_kwarg_warns_and_matches(tiny):
+    """make_fed_round_step/make_run_chunk gamma= shims warn and reproduce
+    the AdapterSet engine bit-for-bit."""
+    _, model, params = tiny
+    opt_cfg = OptimizerConfig(name="sgd", lr=0.05)
+    n = 2
+    lora1 = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
+    lora_n = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), lora1)
+    opt_n = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(),
+        make_optimizer(opt_cfg)[0](lora1))
+    batch = {"tokens": jax.random.randint(jax.random.key(2), (n, 1, 2, 8),
+                                          0, 64)}
+    gamma = 2.0
+
+    new_step = make_fed_round_step(model, strategy="fedsa", opt_cfg=opt_cfg,
+                                   donate=False)
+    new_out, _, new_m = new_step(params, AdapterSet(lora=lora_n, gamma=gamma),
+                                 opt_n, batch, jnp.asarray(0))
+    with pytest.warns(DeprecationWarning):
+        old_step = make_fed_round_step(model, strategy="fedsa",
+                                       opt_cfg=opt_cfg, gamma=gamma,
+                                       donate=False)
+    old_out, _, old_m = old_step(params, lora_n, opt_n, batch, jnp.asarray(0))
+    assert float(new_m["loss"]) == float(old_m["loss"])
+    for a, b in zip(jax.tree.leaves(new_out.lora), jax.tree.leaves(old_out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    with pytest.warns(DeprecationWarning):
+        make_run_chunk(model, strategy="fedsa", opt_cfg=opt_cfg, gamma=gamma,
+                       donate=False)
+
+
+# ------------------------------------------------- LoRA-aware decode parity
+
+def _greedy_positions(model, params, adapters, toks):
+    """Per-position logits from the KV-cache decode loop over given tokens."""
+    b, s = toks.shape
+    cache = model.init_cache(b, s)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(s):
+        logits, cache = step(params, cache, toks[:, t:t + 1],
+                             jnp.full((b,), t), adapters)
+        outs.append(logits)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("tier", ["reference", "interpret"])
+def test_decode_step_matches_forward_with_adapters(tier):
+    """KV-cache decode with an AdapterSet == full forward, position by
+    position, on the reference AND interpret kernel tiers."""
+    num_layers = 2 if tier == "reference" else 1
+    cfg = _cfg(use_pallas=(tier == "interpret"), num_layers=num_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    aset = _nonzero(init_adapter_set(params, jax.random.key(1),
+                                     LoRAConfig(rank=4), n_clients=2))
+    toks = jax.random.randint(jax.random.key(3), (2, 6), 0, 64)
+    dispatch.force_mode(tier if tier == "interpret" else None)
+    try:
+        full, _ = model.forward(params, {"tokens": toks}, adapters=aset)
+        stepped = _greedy_positions(model, params, aset, toks)
+    finally:
+        dispatch.force_mode(None)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stepped),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("tier", ["reference", "interpret"])
+def test_banked_decode_matches_per_adapter_loop(tier):
+    """A mixed-rank AdapterBank batch decodes like a python loop over the
+    same requests served one adapter at a time."""
+    num_layers = 2 if tier == "reference" else 1
+    cfg = _cfg(use_pallas=(tier == "interpret"), num_layers=num_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    sets = [_nonzero(init_adapter_set(params, jax.random.key(10 + i),
+                                      LoRAConfig(rank=r)), seed=20 + i)
+            for i, r in enumerate((2, 8, 4))]
+    bank = AdapterBank.from_sets(sets)
+    toks = jax.random.randint(jax.random.key(4), (3, 5), 0, 64)
+    ids = jnp.asarray([2, 0, 1])
+    dispatch.force_mode(tier if tier == "interpret" else None)
+    try:
+        batched = _greedy_positions(model, params, bank.gather(ids), toks)
+        rows = [
+            _greedy_positions(model, params, bank.adapter(int(k)),
+                              toks[i:i + 1])
+            for i, k in enumerate(ids)]
+    finally:
+        dispatch.force_mode(None)
+    loop = jnp.concatenate(rows, axis=0)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(loop),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_bank_k8_mixed_rank_bit_identical_conformance():
+    """Acceptance: a K=8 mixed-rank AdapterBank batched decode is
+    bit-identical to K single-adapter decodes.
+
+    The K reference decodes run at the SAME batch shape (every row served by
+    adapter k) because XLA GEMM tiling is shape-dependent: equal shapes make
+    the comparison exact and prove request isolation — row i's tokens depend
+    only on its own adapter, never on what the other rows were served."""
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    ranks = (2, 4, 8, 8, 16, 2, 4, 16)
+    sets = [_nonzero(init_adapter_set(params, jax.random.key(30 + i),
+                                      LoRAConfig(rank=r, alpha=float(2 + i))),
+                     seed=40 + i)
+            for i, r in enumerate(ranks)]
+    bank = AdapterBank.from_sets(sets)
+    assert bank.size == 8 and bank.ranks == ranks
+    K = bank.size
+    prompt = jax.random.randint(jax.random.key(5), (K, 2), 0, 64)
+
+    step = jax.jit(lambda cache, tok, pos, ids: model.decode_step(
+        params, cache, tok, pos, adapters=bank.gather(ids)))
+
+    def decode(ids):
+        cache = model.init_cache(K, 8)
+        tok = prompt[:, :1]
+        seq = [tok]
+        for t in range(6):
+            logits, cache = step(cache, tok, jnp.full((K,), t), ids)
+            tok = (prompt[:, t + 1:t + 2] if t + 1 < prompt.shape[1]
+                   else jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
+            seq.append(tok)
+        return jnp.concatenate(seq, axis=1)
+
+    mixed = decode(jnp.arange(K))
+    for k in range(K):
+        single = decode(jnp.full((K,), k))
+        np.testing.assert_array_equal(np.asarray(mixed[k]),
+                                      np.asarray(single[k]))
+
+
+# --------------------------------------------- train-vs-serve checkpointing
+
+def _tiny_trainer(model, ranks=None, n=2):
+    ds = FederatedDataset(64, n, seq_len=16, batch_per_client=2, seed=3)
+    return FederatedTrainer(
+        model, ds,
+        lora_cfg=LoRAConfig(rank=4, ranks=ranks),
+        fed_cfg=FederatedConfig(num_clients=n, local_steps=1,
+                                aggregation="fedsa"),
+        opt_cfg=OptimizerConfig(name="sgd", lr=0.05), seed=3)
+
+
+def test_train_vs_serve_logit_parity(tmp_path):
+    """Satellite regression: --resume restores the TRAINED AdapterSet (gamma
+    + rank mask included) and serves logits bit-identical to the trainer's
+    own client adapters — serve.py can no longer decode random weights."""
+    model = build_model(_cfg())
+    tr = _tiny_trainer(model, ranks=(2, 4))
+    tr.run(2)
+    path = str(tmp_path / "ck.npz")
+    tr.save(path)
+    base, aset = load_adapter_state(path)
+    assert aset.rank_mask is not None and aset.alpha == tr.lora_cfg.alpha
+    toks = jnp.asarray(tr.dataset.eval_batch(4))
+    for c in range(2):
+        train_side, _ = model.forward(tr.base, {"tokens": toks},
+                                      adapters=tr.client_adapters(c))
+        serve_side, _ = model.forward(base, {"tokens": toks},
+                                      adapters=aset.client(c))
+        np.testing.assert_array_equal(np.asarray(train_side),
+                                      np.asarray(serve_side))
+    # and through the bank (gamma folded at registration)
+    bank = AdapterBank.from_adapter_set(aset)
+    assert bank.ranks == (2, 4)
+    banked, _ = model.forward(
+        base, {"tokens": jnp.broadcast_to(toks[:1], (2,) + toks.shape[1:])},
+        adapters=bank.gather(jnp.asarray([0, 1])))
+    per0, _ = model.forward(base, {"tokens": toks[:1]},
+                            adapters=tr.client_adapters(0))
+    np.testing.assert_allclose(np.asarray(banked[0]), np.asarray(per0[0]),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_legacy_checkpoint_upgrade(tmp_path):
+    """Checkpoints written before adapter_meta upgrade via lora_cfg; without
+    it they raise a clear error."""
+    model = build_model(_cfg())
+    tr = _tiny_trainer(model)
+    tr.run(1)
+    path = str(tmp_path / "legacy.npz")
+    # simulate a pre-adapter-API checkpoint: no adapter_meta
+    save_federated_state(path, tr.base, tr.lora, tr.opt_state, tr.round_idx)
+    with pytest.raises(ValueError, match="adapter_meta"):
+        load_adapter_state(path)
+    lcfg = tr.lora_cfg
+    with pytest.warns(UserWarning, match="legacy checkpoint"):
+        base, aset = load_adapter_state(path, lora_cfg=lcfg)
+    # the recomputed gamma matches what the trainer derived
+    assert aset.gamma == pytest.approx(tr.gamma)
+    toks = jnp.asarray(tr.dataset.eval_batch(2))
+    a, _ = model.forward(base, {"tokens": toks},
+                         adapters=aset.client(0))
+    b, _ = model.forward(tr.base, {"tokens": toks},
+                         adapters=tr.client_adapters(0))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_adapters_surface(tiny):
+    """FederatedTrainer exposes the state as AdapterSets."""
+    _, model, params = tiny
+    tr = _tiny_trainer(model, ranks=(2, 4))
+    aset = tr.adapters
+    assert aset.rank == 4 and aset.rank_mask is not None
+    c0 = tr.client_adapters(0)
+    assert c0.rank == 2 and float(np.asarray(c0.rank_mask).sum()) == 2.0
+    assert c0.gamma == tr.client_gamma(0)
+    tr.run_round()
+    assert np.isfinite(tr.eval_perplexity(batch=2))

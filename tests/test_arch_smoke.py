@@ -68,8 +68,9 @@ def test_reduced_federated_train_step(arch):
         batch = reduced_batch(cfg)
         batches = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n, 2) + x.shape), batch)
-        lora, opt, m = tr.round_step(tr.base, tr.lora, tr.opt_state, batches,
-                                     jnp.asarray(0))
+        aset, opt, m = tr.round_step(tr.base, tr.adapters, tr.opt_state,
+                                     batches, jnp.asarray(0))
+        lora = aset.lora
     else:
         m = tr.run_round()
         lora = tr.lora

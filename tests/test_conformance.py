@@ -25,7 +25,7 @@ from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
                                 OptimizerConfig)
 from repro.core.aggregation import STRATEGIES, get_strategy
 from repro.core.federated import FederatedTrainer
-from repro.core.lora import rank_mask, scale_lora_b
+from repro.core.lora import AdapterSet, rank_mask, scale_lora_b
 from repro.data.synthetic import FederatedDataset
 from repro.kernels import dispatch
 from repro.models.api import build_model
@@ -293,12 +293,13 @@ def test_scale_lora_b_gamma_folding_matches_reference():
     gamma = 2.5
 
     def loss_direct(l):
-        return model.loss(base, {"tokens": toks}, lora=l, gamma=gamma)[0]
+        return model.loss(base, {"tokens": toks},
+                          adapters=AdapterSet(lora=l, gamma=gamma))[0]
 
     def loss_folded(l):
-        return model.loss(base, {"tokens": toks},
-                          lora=scale_lora_b(l, jnp.float32(gamma)),
-                          gamma=1.0)[0]
+        return model.loss(
+            base, {"tokens": toks},
+            adapters=AdapterSet(lora=scale_lora_b(l, jnp.float32(gamma))))[0]
 
     v1, g1 = jax.value_and_grad(loss_direct)(lora)
     v2, g2 = jax.value_and_grad(loss_folded)(lora)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import LoRAConfig, ModelConfig
-from repro.core.lora import init_lora
+from repro.core.lora import AdapterSet, init_lora
 from repro.kernels import dispatch, ref
 from repro.kernels.lora_matmul import lora_matmul_vjp
 from repro.models.api import build_model
@@ -164,8 +164,8 @@ def test_model_forward_routes_through_dispatch():
     for flag in (False, True):
         model, params, lora = _tiny_setup(_tiny_cfg(flag))
         dispatch.reset_stats()
-        logits, _ = model.forward(params, {"tokens": toks}, lora=lora,
-                                  gamma=1.1)
+        logits, _ = model.forward(params, {"tokens": toks},
+                                  adapters=AdapterSet(lora=lora, gamma=1.1))
         results[flag] = (np.asarray(logits), dict(dispatch.stats))
     assert results[False][1]["fused"] == 0
     assert results[True][1]["fused"] > 0
@@ -184,7 +184,8 @@ def test_training_grads_match_reference_path():
         model, params, lora = _tiny_setup(_tiny_cfg(flag))
 
         def loss_fn(l):
-            return model.loss(params, {"tokens": toks}, lora=l, gamma=1.1)[0]
+            return model.loss(params, {"tokens": toks},
+                              adapters=AdapterSet(lora=l, gamma=1.1))[0]
 
         grads[flag] = jax.grad(loss_fn)(lora)
     for g1, g2 in zip(jax.tree.leaves(grads[True]),
@@ -288,6 +289,6 @@ def test_decode_step_routes_through_dispatch():
     dispatch.reset_stats()
     logits, _ = model.decode_step(params, cache, jnp.zeros((2, 1), jnp.int32),
                                   jnp.zeros((2,), jnp.int32),
-                                  lora=lora, gamma=1.1)
+                                  adapters=AdapterSet(lora=lora, gamma=1.1))
     assert dispatch.stats["fused"] > 0
     assert logits.shape[:2] == (2, 1)

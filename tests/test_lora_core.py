@@ -8,7 +8,8 @@ from repro.configs import get_config
 from repro.configs.base import LoRAConfig, ModelConfig
 from repro.core.aggregation import (aggregate_clients, mask_grads,
                                     strategy_flags, upload_bytes)
-from repro.core.lora import init_lora, merge_lora, num_lora_params, split_ab
+from repro.core.lora import (AdapterSet, init_lora, merge_lora,
+                             num_lora_params, split_ab)
 from repro.models.api import build_model
 
 
@@ -51,9 +52,9 @@ def test_merge_lora_equals_runtime_adapter(tiny):
         lora)
     gamma = 1.7
     toks = jax.random.randint(jax.random.key(3), (2, 16), 0, 128)
-    with_adapter, _ = model.forward(params, {"tokens": toks}, lora=lora,
-                                    gamma=gamma)
-    merged = merge_lora(params, lora, gamma)
+    aset = AdapterSet(lora=lora, gamma=gamma, rank=4)
+    with_adapter, _ = model.forward(params, {"tokens": toks}, adapters=aset)
+    merged = aset.merge(params)
     with_merged, _ = model.forward(merged, {"tokens": toks})
     np.testing.assert_allclose(np.asarray(with_adapter),
                                np.asarray(with_merged), rtol=1e-4, atol=1e-4)

@@ -18,7 +18,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
                                 OptimizerConfig)
 from repro.core.federated import make_fed_round_step
-from repro.core.lora import init_lora
+from repro.core.lora import AdapterSet, init_lora
 from repro.core.scaling import scaling_factor
 from repro.models.api import build_model
 from repro.sharding import rules
@@ -32,11 +32,13 @@ n = 4
 gamma = scaling_factor("sfedlora", 8.0, 8, n)
 step = make_fed_round_step(model, strategy="fedsa",
                            opt_cfg=OptimizerConfig(name="sgd", lr=0.05),
-                           gamma=gamma, jit=False)
+                           jit=False)
 from repro.optim.optimizers import make_optimizer
 params = model.init(jax.random.key(0))
 lora1 = init_lora(params, jax.random.key(1), LoRAConfig(rank=8))
-lora = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), lora1)
+lora = AdapterSet(
+    lora=jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), lora1),
+    gamma=gamma)
 opt1 = make_optimizer(OptimizerConfig(name="sgd", lr=0.05))[0](lora1)
 opt = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), opt1)
 toks = jax.random.randint(jax.random.key(2), (n, 2, 2, 32), 0, 256)
@@ -44,6 +46,7 @@ batch = {"tokens": toks}
 
 # ---- 1-device reference
 ref_lora, _, ref_m = jax.jit(step)(params, lora, opt, batch, jnp.asarray(0))
+ref_lora = ref_lora.lora
 ref_loss = float(ref_m["loss"])
 
 # ---- 4x2 mesh (data=clients, model=tp)
@@ -55,7 +58,8 @@ in_shard = (rules.params_sharding(params, mesh),
             jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
 with use_mesh(mesh):
     f = jax.jit(step, in_shardings=in_shard)
-    out_lora, _, m = f(params, lora, opt, batch, jnp.asarray(0))
+    out_aset, _, m = f(params, lora, opt, batch, jnp.asarray(0))
+out_lora = out_aset.lora
 loss = float(m["loss"])
 
 # ---- 2x2x2 multi-pod style mesh
