@@ -59,6 +59,32 @@ def main(emit=print):
     us = timeit(fused_grad, x, a, b)
     emit(f"kernels,lora_matmul_bwd_pallas_interp,{us:.1f},flops={bwd_flops}")
 
+    # batched bank kernel (BGMV): the multi-tenant serving delta — per
+    # request row, the shared base GEMM fused with that row's rank-r delta
+    # gathered from the stacked bank by id inside the kernel.
+    from repro.kernels.bgmv import bgmv_gemv, bgmv_matmul, bgmv_reference
+    B, s, K = 8, 32, 8
+    ks2 = jax.random.split(jax.random.key(1), 5)
+    xb = jax.random.normal(ks2[0], (B, s, k), jnp.float32)
+    ab = jax.random.normal(ks2[1], (K, r, k), jnp.float32) * 0.02
+    bb = jax.random.normal(ks2[2], (K, n, r), jnp.float32) * 0.02
+    ids = jnp.arange(B, dtype=jnp.int32) % K
+    flops = B * s * (2 * k * n + 2 * k * r + 2 * r * n)
+    ref_fn = jax.jit(bgmv_reference)
+    us = timeit(ref_fn, xb, w, ab, bb, ids)
+    emit(f"kernels,bgmv_matmul_ref_einsum,{us:.1f},gflops={flops/us/1e3:.2f}")
+    us = timeit(lambda *t: bgmv_matmul(*t, interpret=True), xb, w, ab, bb,
+                ids)
+    emit(f"kernels,bgmv_matmul_pallas_interp,{us:.1f},flops={flops}")
+    # decode shape: one token per request (the GEMV-form kernel)
+    x1 = xb[:, :1]
+    flops1 = B * (2 * k * n + 2 * k * r + 2 * r * n)
+    us = timeit(ref_fn, x1, w, ab, bb, ids)
+    emit(f"kernels,bgmv_gemv_ref_einsum,{us:.1f},gflops={flops1/us/1e3:.2f}")
+    us = timeit(lambda x_, *t: bgmv_gemv(x_[:, 0], *t, interpret=True), x1,
+                w, ab, bb, ids)
+    emit(f"kernels,bgmv_gemv_pallas_interp,{us:.1f},flops={flops1}")
+
     # flash attention: b=1, s=1024, h=4, d=64
     bq, s, h, d = 1, 1024, 4, 64
     q = jax.random.normal(ks[0], (bq, s, h, d), jnp.float32)
@@ -70,6 +96,22 @@ def main(emit=print):
     emit(f"kernels,flash_attention_ref_jnp,{us:.1f},gflops={flops/us/1e3:.2f}")
     us = timeit(lambda *t: flash_mha(*t, causal=True), q, kk, v)
     emit(f"kernels,flash_attention_pallas_interp,{us:.1f},flops={flops}")
+
+    # flash attention, GQA serving shape: 8 query heads sharing 2 KV heads
+    # (the wrapper's KV expansion) — the decode-cache-heavy config
+    hq, hkv = 8, 2
+    qg = jax.random.normal(ks[0], (bq, s, hq, d), jnp.float32)
+    kg = jax.random.normal(ks[1], (bq, s, hkv, d), jnp.float32)
+    vg = jax.random.normal(ks[2], (bq, s, hkv, d), jnp.float32)
+    flops = 4 * bq * hq * s * s * d
+    ref_gqa = jax.jit(lambda q_, k_, v_: ref.flash_attention_ref(
+        q_, jnp.repeat(k_, hq // hkv, axis=2),
+        jnp.repeat(v_, hq // hkv, axis=2), causal=True))
+    us = timeit(ref_gqa, qg, kg, vg)
+    emit(f"kernels,flash_attention_gqa_ref_jnp,{us:.1f},"
+         f"gflops={flops/us/1e3:.2f}")
+    us = timeit(lambda *t: flash_mha(*t, causal=True), qg, kg, vg)
+    emit(f"kernels,flash_attention_gqa_pallas_interp,{us:.1f},flops={flops}")
 
     # rglru scan: (bt, s, d) = (4, 2048, 256)
     bt, s, d = 4, 2048, 256

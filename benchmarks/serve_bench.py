@@ -1,22 +1,44 @@
-"""Multi-tenant serving throughput: base vs 1 adapter vs K=8 banked adapters.
+"""Multi-tenant serving throughput: base vs 1 adapter vs K=8 banked adapters,
+compiled engine vs host loop.
 
-Measures greedy KV-cache decode tokens/sec on the shared 4-layer benchmark
-model for three serving shapes:
+Measures greedy KV-cache generation on the shared 4-layer benchmark model for
+three serving shapes:
 
   base       no adapters — the floor (one GEMM per projection)
   adapter1   one AdapterSet for the whole batch (classic LoRA serving)
-  bank8      a K=8 mixed-rank AdapterBank, one adapter per request gathered
-             inside the compiled step (the multi-tenant path)
+  bank8      a K=8 mixed-rank AdapterBank, one adapter per request (the
+             multi-tenant path — lazy ``requests()`` gather on the compiled
+             engine, materialized per-step gather on the host loop)
 
-The interesting number is bank8/adapter1: the batched gather + per-request
-rank-r delta costs a pair of batched GEMVs per projection, so banked serving
-of 8 heterogeneous tenants should stay within a small factor of single-
-adapter serving rather than 8x (which is what one-merge-per-tenant would
-cost in executables or weight copies).
+and two engines:
 
-Timing excludes compilation (one warm-up decode per variant); results land
-in EXPERIMENTS/bench_serve.json.
+  compiled   ONE host dispatch per generation: batched prefill fills the KV
+             cache over the whole prompt, then a lax.scan decode loop runs
+             entirely on device (``launch/serve.generate``)
+  hostloop   the pre-engine oracle: one jitted dispatch per token, prompt
+             fed through single-token decode steps
+
+Reported per (engine, variant): end-to-end tokens/sec, prefill and decode
+tokens/sec separately, and the host-dispatch count per generation call.
+Prefill/decode are split by timing a prefill-only call and attributing the
+remainder to decode.  The headline ratios:
+
+  bank8_vs_adapter1     compiled bank8 / compiled adapter1 tokens/sec — the
+                        cost of multi-tenancy (1.0 = free)
+  compiled_vs_hostloop  per-variant speedup of the device-resident engine
+
+Timing excludes compilation (every callable is warmed first), interleaves
+the variants round-robin, and spans several fresh compiles of every
+executable (XLA CPU compile luck is a ~±15% band — larger than the effects
+measured here), taking the per-variant minimum, so neither machine noise nor
+one compile's draw can skew the cross-variant ratios; results land in
+EXPERIMENTS/bench_serve.json AND the repo-root BENCH_serve.json (committed,
+so the serving-perf trajectory is reviewable across PRs).
+
+``--ci`` asserts the pinned regression floors (used by the serve-perf CI
+smoke): bank8_vs_adapter1 and compiled-vs-hostloop on the bank path.
 """
+import argparse
 import json
 import os
 import time
@@ -27,34 +49,77 @@ import jax.numpy as jnp
 from benchmarks.common import bench_config
 from repro.configs.base import LoRAConfig
 from repro.core.lora import AdapterBank, init_adapter_set
-from repro.launch.serve import generate, generate_banked
+from repro.launch import serve
 from repro.models.api import build_model
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 BATCH = 8
+PROMPT = 32
 STEPS = 32
 RANKS = (4, 8, 16, 8, 4, 16, 8, 8)
 
-
-def _decode_tps(fn, batch, steps, repeats=3):
-    fn()                                    # compile + warm caches
-    times = []
-    for _ in range(repeats):
-        t0 = time.time()
-        fn()
-        times.append(time.time() - t0)
-    dt = min(times)
-    return batch * steps / dt
+# CI regression floors (see --ci): deliberately below the locally measured
+# numbers to absorb runner jitter, far above the pre-engine baseline
+# (bank8_vs_adapter1 was 0.709 before the compiled engine + lazy gather).
+CI_FLOOR_BANK_VS_ADAPTER = 0.75
+CI_FLOOR_COMPILED_VS_HOSTLOOP = 1.3
 
 
-def main(steps: int = STEPS):
+REPEATS = 7
+# XLA CPU compilation is nondeterministic enough to matter: the SAME program
+# recompiled lands within a ~±15% speed band (layout/fusion luck), which is
+# larger than the cross-variant effects this bench reports.  So the timing
+# runs over several fresh compiles of every executable and keeps the
+# per-variant minimum — the program's achievable speed, not one compile's
+# draw.
+COMPILE_TRIALS = 3
+
+
+def _time_all(timers, *, model, repeats=REPEATS, trials=COMPILE_TRIALS):
+    """min seconds per callable across ``trials`` fresh compiles, each timed
+    ``repeats`` times INTERLEAVED round-robin so a slow phase of the machine
+    penalizes every variant equally instead of whichever happened to be on
+    the clock (compile/warm-up always excluded)."""
+    best = {k: float("inf") for k in timers}
+    for trial in range(trials):
+        if trial:
+            jax.clear_caches()
+            model.__dict__.pop("_serve_jit_cache", None)
+        for fn in timers.values():
+            jax.block_until_ready(fn())
+        for _ in range(repeats):
+            for k, fn in timers.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def _rows(best, name, prompt_len, steps, batch, dispatches):
+    """tokens/sec rows (end-to-end, prefill, decode) for one variant."""
+    out = {}
+    for engine in ("compiled", "hostloop"):
+        t_full = best[(name, engine)]
+        t_pre = best[(name, engine + "_prefill")]
+        out[engine] = {
+            "tokens_per_sec": batch * (prompt_len + steps) / t_full,
+            "prefill_tokens_per_sec": batch * prompt_len / t_pre,
+            "decode_tokens_per_sec": (batch * (steps - 1)
+                                      / max(t_full - t_pre, 1e-9)),
+            "host_dispatches": dispatches[engine],
+        }
+    return out
+
+
+def main(steps: int = STEPS, ci: bool = False):
     cfg = bench_config()
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    prompt = jax.random.randint(jax.random.key(1), (BATCH, 4), 0,
+    prompt = jax.random.randint(jax.random.key(1), (BATCH, PROMPT), 0,
                                 cfg.vocab_size)
-    max_len = 4 + steps
+    max_len = PROMPT + steps
 
     sets = [init_adapter_set(params, jax.random.fold_in(jax.random.key(2), i),
                              LoRAConfig(rank=r), n_clients=len(RANKS))
@@ -63,30 +128,103 @@ def main(steps: int = STEPS):
     one = sets[1]
     ids = jnp.arange(BATCH) % bank.size
 
+    # prefill-only calls (jitted standalone so the split is measurable;
+    # last_only matches the program the compiled engine actually runs)
+    prefill = jax.jit(lambda a: model.prefill(
+        params, model.init_cache(BATCH, max_len), prompt, a,
+        last_only=True)[0])
+
     variants = {
-        "base": lambda: generate(model, params, prompt, steps, max_len),
-        "adapter1": lambda: generate(model, params, prompt, steps, max_len,
-                                     adapters=one),
-        "bank8": lambda: generate_banked(model, params, bank, ids, prompt,
-                                         steps, max_len),
+        "base": {
+            "compiled": lambda: serve.generate(model, params, prompt, steps,
+                                               max_len),
+            "hostloop": lambda s=steps: serve.generate_hostloop(
+                model, params, prompt, s, max_len),
+            "prefill": lambda: prefill(None),
+        },
+        "adapter1": {
+            "compiled": lambda: serve.generate(model, params, prompt, steps,
+                                               max_len, one),
+            "hostloop": lambda s=steps: serve.generate_hostloop(
+                model, params, prompt, s, max_len, one),
+            "prefill": lambda: prefill(one),
+        },
+        "bank8": {
+            "compiled": lambda: serve.generate_banked(model, params, bank,
+                                                      ids, prompt, steps,
+                                                      max_len),
+            "hostloop": lambda s=steps: serve.generate_banked_hostloop(
+                model, params, bank, ids, prompt, s, max_len),
+            "prefill": lambda: prefill(bank.requests(ids)),
+        },
     }
-    results = {"batch": BATCH, "steps": steps, "ranks": list(RANKS)}
-    print("bench,variant,tokens_per_sec")
-    for name, fn in variants.items():
-        tps = _decode_tps(fn, BATCH, steps)
-        results[name] = {"tokens_per_sec": tps}
-        print(f"serve,{name},{tps:.1f}")
-    if results.get("adapter1") and results.get("bank8"):
-        rel = (results["bank8"]["tokens_per_sec"]
-               / results["adapter1"]["tokens_per_sec"])
-        results["bank8_vs_adapter1"] = rel
-        print(f"serve,bank8_vs_adapter1,{rel:.3f}")
+
+    timers = {}
+    for name, fns in variants.items():
+        timers[(name, "compiled")] = fns["compiled"]
+        timers[(name, "compiled_prefill")] = fns["prefill"]
+        timers[(name, "hostloop")] = fns["hostloop"]
+        # host-loop prefill phase ~= a steps=1 run (prompt fed token by token)
+        timers[(name, "hostloop_prefill")] = lambda fns=fns: fns["hostloop"](1)
+    best = _time_all(timers, model=model)
+
+    results = {"batch": BATCH, "prompt": PROMPT, "steps": steps,
+               "ranks": list(RANKS),
+               "engines": {"compiled": {}, "hostloop": {}}}
+    print("bench,engine,variant,tokens_per_sec,prefill_tps,decode_tps,"
+          "host_dispatches")
+    for name, fns in variants.items():
+        dispatches = {}
+        for engine in ("compiled", "hostloop"):
+            serve.reset_dispatch_meter()
+            fns[engine]()
+            dispatches[engine] = serve.host_dispatches
+        rows = _rows(best, name, PROMPT, steps, BATCH, dispatches)
+        for engine, row in rows.items():
+            results["engines"][engine][name] = row
+            print(f"serve,{engine},{name},{row['tokens_per_sec']:.1f},"
+                  f"{row['prefill_tokens_per_sec']:.1f},"
+                  f"{row['decode_tokens_per_sec']:.1f},"
+                  f"{row['host_dispatches']}")
+
+    comp = results["engines"]["compiled"]
+    host = results["engines"]["hostloop"]
+    results["bank8_vs_adapter1"] = (comp["bank8"]["tokens_per_sec"]
+                                    / comp["adapter1"]["tokens_per_sec"])
+    results["compiled_vs_hostloop"] = {
+        k: comp[k]["tokens_per_sec"] / host[k]["tokens_per_sec"]
+        for k in comp}
+    print(f"serve,ratio,bank8_vs_adapter1,"
+          f"{results['bank8_vs_adapter1']:.3f}")
+    for k, v in results["compiled_vs_hostloop"].items():
+        print(f"serve,ratio,compiled_vs_hostloop_{k},{v:.2f}")
+
     os.makedirs(OUT, exist_ok=True)
-    with open(os.path.join(OUT, "bench_serve.json"), "w") as f:
-        json.dump(results, f, indent=2)
-    print(f"# wrote EXPERIMENTS/bench_serve.json")
+    for path in (os.path.join(OUT, "bench_serve.json"),
+                 os.path.join(ROOT, "BENCH_serve.json")):
+        with open(path, "w") as f:
+            json.dump(results, f, indent=2)
+    print("# wrote EXPERIMENTS/bench_serve.json + BENCH_serve.json")
+
+    if ci:
+        rel = results["bank8_vs_adapter1"]
+        spd = results["compiled_vs_hostloop"]["bank8"]
+        assert rel >= CI_FLOOR_BANK_VS_ADAPTER, (
+            f"bank8_vs_adapter1 regressed: {rel:.3f} < "
+            f"{CI_FLOOR_BANK_VS_ADAPTER}")
+        assert spd >= CI_FLOOR_COMPILED_VS_HOSTLOOP, (
+            f"compiled engine speedup regressed: {spd:.2f}x < "
+            f"{CI_FLOOR_COMPILED_VS_HOSTLOOP}x")
+        print(f"# CI floors hold: bank8_vs_adapter1={rel:.3f} "
+              f">= {CI_FLOOR_BANK_VS_ADAPTER}, compiled_vs_hostloop(bank8)="
+              f"{spd:.2f}x >= {CI_FLOOR_COMPILED_VS_HOSTLOOP}x")
     return results
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--ci", action="store_true",
+                    help="assert the pinned perf floors (CI serve-perf job)")
+    a = ap.parse_args()
+    main(steps=a.steps, ci=a.ci)

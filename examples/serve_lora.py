@@ -1,7 +1,9 @@
 """Serving example: load a federated checkpoint into an AdapterBank and run
 MULTI-TENANT batched greedy decoding — every client's personalized adapters
-served concurrently from one compiled KV-cache decode step, the per-request
-adapter gathered from the bank on device.
+served concurrently by the device-resident generation engine: one batched
+prefill over the prompt, then a lax.scan decode loop on device, the
+per-request adapter rows gathered lazily from the stacked bank (in-kernel on
+the fused BGMV tier).  A whole generation is ONE host dispatch.
 
 Also shows the classic single-tenant deployment (merge one client's
 AdapterSet into the base weights: zero serving overhead).
@@ -24,6 +26,7 @@ from repro.checkpoint.io import load_adapter_state
 from repro.configs import get_config
 from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
 from repro.core.lora import AdapterBank
+from repro.launch import serve
 from repro.launch.serve import generate, generate_banked
 from repro.models.api import build_model
 
@@ -70,9 +73,11 @@ print(f"bank: {bank.size} tenants, ranks {bank.ranks}, "
 # ---- multi-tenant: 4 requests, round-robin over the checkpointed clients
 prompt = jnp.asarray([[5, 17, 42, 7]] * 4, jnp.int32)
 ids = jnp.arange(4) % bank.size
+serve.reset_dispatch_meter()
 seq = generate_banked(model, base, bank, ids, prompt, steps=STEPS,
                       max_len=4 + STEPS)
-print(f"banked decode (adapter ids {list(map(int, ids))}):")
+print(f"banked decode (adapter ids {list(map(int, ids))}, "
+      f"{serve.host_dispatches} host dispatch for {STEPS} tokens):")
 print(seq)
 
 # personalization check: rows served by different tenants may diverge even

@@ -252,8 +252,12 @@ class AdapterSet:
     ``(N, r)``/``(K, r)`` for client-stacked / bank-gathered sets; ``None``
     means every rank row is active.  ``rank``/``alpha`` are bookkeeping
     metadata (checkpoint round-trips, bank registration).  ``batched`` marks
-    a per-request set gathered from an :class:`AdapterBank`: every leaf
-    carries a leading request dim that pairs with the batch row of ``x``.
+    a per-request set from an :class:`AdapterBank`: either every leaf
+    carries a leading request dim pairing with the batch row of ``x``
+    (``gather`` — materialized) or the leaves stay bank-stacked ``(K, ...)``
+    with ``ids`` mapping batch rows to tenants (``requests`` — the lazy
+    form whose gather happens at the projection site, in-kernel on the
+    BGMV tier).
 
     Pytree layout: ``lora`` is a child; ``gamma`` and ``rank_mask`` are
     CONFIG, not state — when they are concrete host values (a float, a
@@ -272,6 +276,7 @@ class AdapterSet:
     rank: int = 0
     alpha: float = 0.0
     batched: bool = False
+    ids: Any = None          # (B,) request->tenant map for lazy banked sets
 
     def __post_init__(self):
         # Normalize concrete config to HOST values once, here: pytree
@@ -446,18 +451,19 @@ def _aset_flatten(s):
     m_aux = _encode_static(s.rank_mask)
     children = (s.lora,
                 None if m_aux is not None else s.rank_mask,
-                None if g_aux is not None else s.gamma)
+                None if g_aux is not None else s.gamma,
+                s.ids)
     aux = (g_aux, m_aux, s.rank, s.alpha, s.batched)
     return children, aux
 
 
 def _aset_unflatten(aux, children):
-    lora, mask_child, gamma_child = children
+    lora, mask_child, gamma_child, ids = children
     g_aux, m_aux, rank, alpha, batched = aux
     gamma = gamma_child if g_aux is None else _decode_static(g_aux)
     rank_mask = mask_child if m_aux is None else _decode_static(m_aux)
     return AdapterSet(lora=lora, gamma=gamma, rank_mask=rank_mask,
-                      rank=rank, alpha=alpha, batched=batched)
+                      rank=rank, alpha=alpha, batched=batched, ids=ids)
 
 
 jax.tree_util.register_pytree_node(AdapterSet, _aset_flatten, _aset_unflatten)
@@ -521,17 +527,31 @@ class AdapterBank:
                    ranks=tuple(int(r) for r in ranks))
 
     def gather(self, ids) -> AdapterSet:
-        """Per-request adapters: ``ids`` (b,) int tenant indices (may be
-        traced).  Returns a ``batched`` AdapterSet whose leaves carry a
-        leading request dim — gamma is already folded, so it serves under
-        the static scale 1 every kernel tier accepts.  No rank mask rides
-        along: bank registration stored the sets exactly masked and
-        zero-padded, so a gathered mask would only re-multiply every A/B
-        leaf by its own zero pattern on every decode step."""
+        """Per-request adapters, MATERIALIZED: ``ids`` (b,) int tenant
+        indices (may be traced).  Returns a ``batched`` AdapterSet whose
+        leaves carry a leading request dim — gamma is already folded, so it
+        serves under the static scale 1 every kernel tier accepts.  No rank
+        mask rides along: bank registration stored the sets exactly masked
+        and zero-padded, so a gathered mask would only re-multiply every
+        A/B leaf by its own zero pattern on every decode step.
+
+        Copies every adapter leaf per call — prefer :meth:`requests` on the
+        serving hot path, which defers the gather to the projection site."""
         ids = jnp.asarray(ids)
         lora = jax.tree.map(lambda x: x[ids], self.lora)
         return AdapterSet(lora=lora, gamma=1.0,
                           rank=adapter_rank(lora), batched=True)
+
+    def requests(self, ids) -> AdapterSet:
+        """Per-request adapters, LAZY: the bank leaves stay stacked
+        ``(K, ...)`` and the request->tenant map rides along as ``ids``, so
+        the gather happens per projection — inside the BGMV kernel via its
+        ids-indexed BlockSpecs on the fused tiers, or as a per-layer XLA
+        gather on the reference tier — instead of materializing ``(B, ...)``
+        copies of every adapter leaf each generation step."""
+        return AdapterSet(lora=self.lora, gamma=1.0,
+                          rank=adapter_rank(self.lora), batched=True,
+                          ids=jnp.asarray(ids, jnp.int32))
 
     def adapter(self, k: int) -> AdapterSet:
         """Tenant ``k`` as a plain single AdapterSet (the per-adapter loop

@@ -38,13 +38,16 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bgmv import bgmv_gemv, bgmv_matmul
 from repro.kernels.lora_matmul import lora_matmul_vjp
+from repro.kernels import tiling
 
 MODES = ("reference", "interpret", "pallas")
 
-# MXU-aligned kernel block defaults (see lora_matmul.py) and fp32 tiling
+# MXU-aligned kernel block defaults (see lora_matmul.py); tile alignment
+# (sublane/lane, rounding, zero-padding) is shared with the BGMV tier via
+# kernels/tiling.py
 BM, BN, BK = 256, 256, 512
-_SUBLANE, _LANE = 8, 128
 
 # contextvars so concurrent traces (e.g. an eval thread tracing a reference
 # model while a trainer thread traces a fused one) can't cross-contaminate
@@ -57,13 +60,12 @@ _forced = contextvars.ContextVar("repro_forced_mode", default=None)
 # single-threaded tests/debugging only — cached jit calls don't re-count,
 # and concurrent traces share it.  Routing correctness itself is isolated
 # via the contextvars above.
-stats = {"fused": 0, "reference": 0, "batched": 0}
+stats = {"fused": 0, "reference": 0, "batched": 0, "bgmv": 0}
 
 
 def reset_stats() -> None:
-    stats["fused"] = 0
-    stats["reference"] = 0
-    stats["batched"] = 0
+    for k in stats:
+        stats[k] = 0
 
 
 def force_mode(mode) -> None:
@@ -105,21 +107,6 @@ def scope(use_pallas: bool):
 
 # ------------------------------------------------------------------ padding
 
-def _round_up(v: int, mult: int) -> int:
-    return -(-v // mult) * mult
-
-
-def _block(dim: int, default: int, align: int) -> int:
-    return min(default, _round_up(dim, align))
-
-
-def _pad2(arr, rows: int, cols: int):
-    pr, pc = rows - arr.shape[0], cols - arr.shape[1]
-    if pr or pc:
-        arr = jnp.pad(arr, ((0, pr), (0, pc)))
-    return arr
-
-
 def fused_lora_apply(x2, w, a, b, gamma, *, interpret: bool):
     """Run the fused custom-VJP kernel on arbitrary (m, k, n, r): pick
     aligned block sizes, zero-pad every dim to a block multiple, slice the
@@ -132,13 +119,16 @@ def fused_lora_apply(x2, w, a, b, gamma, *, interpret: bool):
         # nothing to fuse on empty operands; the reference expression gives
         # the correctly-shaped (possibly empty) result on every tier
         return x2 @ w + gamma * ((x2 @ a.T) @ b.T)
-    bm = _block(m, BM, _SUBLANE)
-    bn = _block(n, BN, _LANE)
-    bk = _block(kdim, BK, _LANE)
-    mp, kp, np_ = _round_up(m, bm), _round_up(kdim, bk), _round_up(n, bn)
-    rp = _round_up(r, _SUBLANE)
-    y = lora_matmul_vjp(_pad2(x2, mp, kp), _pad2(w, kp, np_),
-                        _pad2(a, rp, kp), _pad2(b, np_, rp), gamma,
+    bm = tiling.block(m, BM, tiling.SUBLANE)
+    bn = tiling.block(n, BN, tiling.LANE)
+    bk = tiling.block(kdim, BK, tiling.LANE)
+    mp = tiling.round_up(m, bm)
+    kp, np_ = tiling.round_up(kdim, bk), tiling.round_up(n, bn)
+    rp = tiling.round_up(r, tiling.SUBLANE)
+    y = lora_matmul_vjp(tiling.pad_last2(x2, mp, kp),
+                        tiling.pad_last2(w, kp, np_),
+                        tiling.pad_last2(a, rp, kp),
+                        tiling.pad_last2(b, np_, rp), gamma,
                         bm=bm, bn=bn, bk=bk, interpret=interpret)
     if mp != m or np_ != n:
         y = y[:m, :n]
@@ -149,24 +139,62 @@ def fused_lora_apply(x2, w, a, b, gamma, *, interpret: bool):
 
 def lora_linear_batched(x, w, lora, gamma: float = 1.0):
     """Per-request adapters (multi-tenant serving): each batch row of ``x``
-    pairs with its own adapter gathered from an ``AdapterBank``.
+    pairs with its own adapter out of an ``AdapterBank``.
 
-    ``x`` (B, s, d_in); ``lora`` leaves carry the leading request dim —
-    ``a`` (B, r, d_in), ``b`` (B, d_out, r).  The base projection stays one
-    shared GEMM; the delta is a pair of batched GEMMs (BGMV-style — the
-    rank-r contraction per request), which XLA lowers as grouped matmuls.
-    Each output row is bit-identical to the single-adapter path run on that
-    row alone: the contractions reduce over the same axes in the same order.
+    Two leaf layouts arrive here, both with 3-D adapter leaves:
+
+      materialized   ``a`` (B, r, d_in), ``b`` (B, d_out, r) — row i pairs
+                     with adapter i (``AdapterBank.gather`` already copied
+                     the per-request tree)
+      lazy bank      ``a`` (K, r, d_in), ``b`` (K, d_out, r) plus an
+                     ``ids`` (B,) entry (``AdapterBank.requests``) — row i
+                     is served with tenant ``ids[i]``; the gather happens
+                     HERE, per projection, instead of materializing (B, ...)
+                     copies of the bank upstream
+
+    Reference tier: one shared base GEMM + a pair of batched rank-r einsums
+    (XLA grouped matmuls) on the (possibly just-gathered) per-request leaves
+    — each output row bit-identical to the single-adapter path run on that
+    row alone.  Fused tiers run the BGMV kernel (`kernels/bgmv.py`): the
+    base GEMM and both rank-r GEMMs fuse into one pass over ``x``, and the
+    lazy-bank gather moves into the kernel's ids-indexed BlockSpecs, so no
+    per-request adapter copy ever exists.  Decode's (B, 1, d_in) shape takes
+    the GEMV-form kernel (no s dim, no sublane padding of request rows).
     """
     a, b = lora["a"], lora["b"]
-    if x.ndim != 3 or a.shape[0] != x.shape[0]:
+    ids = lora.get("ids")
+    nreq = (a if ids is None else ids).shape[0]
+    if x.ndim != 3 or nreq != x.shape[0]:
         raise ValueError(
-            f"batched adapters need x (B, s, d_in) with B == a.shape[0]; "
-            f"got x {x.shape}, a {a.shape}")
+            f"batched adapters need x (B, s, d_in) with B requests; "
+            f"got x {x.shape}, a {a.shape}, ids "
+            f"{None if ids is None else ids.shape}")
     stats["batched"] += 1
-    y = x @ w
-    xa = jnp.einsum("bsk,brk->bsr", x, a)
-    return y + gamma * jnp.einsum("bsr,bor->bso", xa, b)
+    mode = resolve_mode()
+    if mode == "reference" or 0 in (*x.shape, w.shape[1], a.shape[-2]):
+        ar = a if ids is None else jnp.take(a, ids, axis=0)
+        br = b if ids is None else jnp.take(b, ids, axis=0)
+        y = x @ w
+        xa = jnp.einsum("bsk,brk->bsr", x, ar)
+        return y + gamma * jnp.einsum("bsr,bor->bso", xa, br)
+    if isinstance(gamma, jax.core.Tracer):
+        raise TypeError(
+            "the fused kernel tier needs a static (python float) gamma — "
+            "banked adapters arrive scale-folded (gamma == 1), so a traced "
+            "gamma here means an unprepared AdapterSet reached serving.")
+    stats["bgmv"] += 1
+    if float(gamma) != 1.0:
+        b = b * jnp.asarray(gamma, b.dtype)
+    out_dtype = jnp.result_type(x.dtype, w.dtype, a.dtype, b.dtype)
+    interpret = mode == "interpret"
+    ids_arr = (jnp.arange(x.shape[0], dtype=jnp.int32) if ids is None
+               else ids)
+    xc = x.astype(out_dtype)
+    if x.shape[1] == 1:
+        y = bgmv_gemv(xc[:, 0], w, a, b, ids_arr, interpret=interpret)
+        return y[:, None, :].astype(out_dtype)
+    return bgmv_matmul(xc, w, a, b, ids_arr,
+                       interpret=interpret).astype(out_dtype)
 
 
 def lora_linear(x, w, lora=None, gamma: float = 0.0):

@@ -1,0 +1,28 @@
+"""Shared tile geometry for the kernel tiers: fp32 sublane/lane multiples
+and the zero-padding helpers every Pallas wrapper uses.  One home, so the
+fused single-adapter tier (dispatch.py) and the banked BGMV tier (bgmv.py)
+can never disagree about alignment."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SUBLANE, LANE = 8, 128   # fp32 TPU tiling: (8, 128) min tile
+
+
+def round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def block(dim: int, default: int, align: int) -> int:
+    """Block size for ``dim``: the default, or the whole (aligned) dim when
+    smaller — so small operands stay single-block instead of over-padding."""
+    return min(default, round_up(dim, align))
+
+
+def pad_last2(arr, rows: int, cols: int):
+    """Zero-pad the LAST TWO dims up to (rows, cols); leading dims ride
+    along untouched.  Zero rows/cols are exact for every GEMM here."""
+    pr, pc = rows - arr.shape[-2], cols - arr.shape[-1]
+    if pr or pc:
+        arr = jnp.pad(arr, ((0, 0),) * (arr.ndim - 2) + ((0, pr), (0, pc)))
+    return arr

@@ -1,10 +1,17 @@
 """Multi-tenant batched LoRA serving from an AdapterBank.
 
-One compiled decode step serves every tenant at once: each request carries an
-adapter id, the step gathers that request's (padded, scale-folded) adapter
-from the bank on device, and the batched dispatch path applies one adapter
-per batch row — heterogeneous-rank adapters from N federated clients decode
-in a single batch, no per-tenant recompiles, no weight merging.
+Generation is a DEVICE-RESIDENT engine: one ``model.prefill`` fills the KV
+cache over the whole prompt in a single batched forward, then a ``lax.scan``
+decode loop carries (cache, token, PRNG key) entirely on device — greedy and
+temperature sampling happen inside the scan, so a whole generation is ONE
+host dispatch instead of one per token.  The signature is uniform across the
+base / single-adapter / bank paths because the adapters travel as one value.
+
+The bank path uses ``AdapterBank.requests(ids)`` — the LAZY per-request
+view: adapter leaves stay tenant-stacked and each projection gathers its own
+rows (in-kernel via the BGMV tier's ids-indexed BlockSpecs on fused tiers),
+so serving K heterogeneous-rank tenants never materializes per-request
+copies of the bank.
 
   # fresh random adapters (API smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
@@ -16,12 +23,14 @@ in a single batch, no per-tenant recompiles, no weight merging.
       --resume /tmp/ck.npz --steps 16 --batch 8
 
 The classic zero-overhead single-tenant path (merge one client's adapters
-into the base weights) remains available via ``--merge CLIENT``.
+into the base weights) remains available via ``--merge CLIENT``.  The old
+token-by-token host loop survives as ``generate_hostloop`` — the parity
+oracle the compiled engine is tested against, and serve_bench's baseline.
 """
 from __future__ import annotations
 
 import argparse
-import functools
+import dataclasses
 import time
 
 import jax
@@ -33,66 +42,212 @@ from repro.configs.base import LoRAConfig
 from repro.core.lora import AdapterBank, AdapterSet, init_adapter_set
 from repro.models.api import build_model
 
+# Host->device dispatch meter: every jitted call the generation helpers make
+# increments this (serve_bench reports it; a compiled generate is exactly 1).
+host_dispatches = 0
 
-@functools.lru_cache(maxsize=None)
+
+def reset_dispatch_meter() -> None:
+    global host_dispatches
+    host_dispatches = 0
+
+
+def _count_dispatch(n: int = 1) -> None:
+    global host_dispatches
+    host_dispatches += n
+
+
+def _model_jit(model, name: str, builder):
+    """Per-model jit cache stored ON the model object itself.
+
+    The previous ``functools.lru_cache(maxsize=None)`` keyed on Model
+    instances pinned every model (and its compiled executables) for process
+    lifetime.  An attribute cache makes the model own its executables: the
+    model <-> jitted-fn reference cycle is ordinary gc-collectable garbage,
+    so dropping the model frees everything (regression-tested)."""
+    cache = model.__dict__.setdefault("_serve_jit_cache", {})
+    fn = cache.get(name)
+    if fn is None:
+        fn = builder(model)
+        cache[name] = fn
+    return fn
+
+
 def _jit_decode_step(model):
     """One jitted decode step per Model instance: ``model.decode_step`` is
     a fresh bound-method object on every attribute access, so an inline
     ``jax.jit(model.decode_step)`` would build a new executable cache per
     call and recompile every time the generator is re-entered."""
-    return jax.jit(model.decode_step)
+    return _model_jit(model, "decode_step",
+                     lambda m: jax.jit(m.decode_step))
 
 
-@functools.lru_cache(maxsize=None)
 def _jit_banked_step(model):
-    """One jitted bank-gathering decode step per Model instance."""
-    @jax.jit
-    def step(params, cache, tok, pos, bank, ids):
-        return model.decode_step(params, cache, tok, pos,
+    """One jitted bank-gathering decode step per Model instance (the
+    host-loop oracle's banked path; the compiled engine gathers lazily)."""
+    def build(m):
+        @jax.jit
+        def step(params, cache, tok, pos, bank, ids):
+            return m.decode_step(params, cache, tok, pos,
                                  adapters=bank.gather(ids))
-    return step
+        return step
+    return _model_jit(model, "banked_step", build)
 
 
-def generate(model, params, prompt, steps: int, max_len: int, adapters=None):
-    """Greedy decode ``steps`` tokens after the prompt (prefill via decode).
+# ------------------------------------------------------------ compiled engine
+
+def _sample(logits, key, temperature: float, vocab: int):
+    """One next token per row from (b, V) logits.  ``temperature`` is a
+    static float: 0.0 compiles to pure greedy (no RNG ops in the graph).
+    Both branches slice off the padded vocab rows (``V`` is ``vocab_padded``
+    and the untrained padding logits are nonzero — random-normal embed
+    init), so emitted ids are always real tokens; the host-loop oracle
+    slices identically, keeping the engines bit-comparable."""
+    logits = logits[..., :vocab]
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature).astype(jnp.int32)
+
+
+def _compiled_generate(model):
+    """The device-resident generation program, jitted once per model:
+    prefill over the prompt, then a lax.scan decode loop whose carry
+    (cache, token, key) never leaves the device."""
+    def build(m):
+        def run(params, prompt, adapters, key, *, steps, max_len,
+                temperature):
+            b, p = prompt.shape
+            vocab = m.cfg.vocab_size
+            # Prepare the adapter tree ONCE per generation: gamma folds,
+            # rank masking, the bank's per-request gather, and the
+            # (K, layers) -> (layers, K) scan relayout are all
+            # loop-invariant, but left inside decode_step they re-run EVERY
+            # token (XLA does not hoist the relayout transposes or gathers
+            # out of the scan — together ~2MB of copies per step at bench
+            # scale).  The ids are fixed for the whole call, so the lazy
+            # bank view materializes its request rows here — one (B, ...)
+            # gather per generation; decode_step then consumes a prepared
+            # pass-through tree.  (The in-kernel BGMV gather still serves
+            # direct decode_step/prefill callers, where ids change per
+            # step.)
+            if (adapters is not None and adapters.batched
+                    and adapters.ids is not None):
+                adapters = dataclasses.replace(
+                    adapters,
+                    lora=jax.tree.map(lambda x: x[adapters.ids],
+                                      adapters.lora),
+                    ids=None)
+            tree = m._stack_adapters(adapters)
+            adapters = None if tree is None else AdapterSet(
+                lora={"stack": tree})
+            cache = m.init_cache(b, max_len)
+            logits, cache = m.prefill(params, cache, prompt, adapters,
+                                      last_only=True)
+            key, k0 = jax.random.split(key)
+            tok = _sample(logits[:, -1], k0, temperature, vocab)[:, None]
+
+            def step(carry, pos):
+                cache, tok, key = carry
+                lg, cache = m.decode_step(params, cache, tok,
+                                          jnp.full((b,), pos), adapters)
+                key, kt = jax.random.split(key)
+                nxt = _sample(lg[:, -1], kt, temperature, vocab)[:, None]
+                return (cache, nxt, key), nxt[:, 0]
+
+            (cache, _, _), rest = jax.lax.scan(
+                step, (cache, tok, key),
+                jnp.arange(p, p + steps - 1, dtype=jnp.int32))
+            return jnp.concatenate(
+                [prompt.astype(jnp.int32), tok, rest.T], axis=1)
+        return jax.jit(run, static_argnames=("steps", "max_len",
+                                             "temperature"))
+    return _model_jit(model, "generate", build)
+
+
+def generate(model, params, prompt, steps: int, max_len: int, adapters=None,
+             *, temperature: float = 0.0, key=None):
+    """Compiled generation: ``steps`` tokens after the prompt in ONE host
+    dispatch (batched prefill + on-device scan decode).
 
     ``adapters``: None (base / merged weights), a single AdapterSet, or a
-    ``batched`` one from ``AdapterBank.gather`` — the signature is uniform
-    because the adapters travel as one value."""
+    banked per-request set (``AdapterBank.requests``/``gather``) — the
+    signature is uniform because the adapters travel as one value.
+    ``temperature`` 0.0 decodes greedily; > 0.0 samples inside the scan
+    from ``key`` (defaults to a fixed key for reproducibility).
+    Returns the (b, p + steps) sequence, prompt included."""
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    prompt = jnp.asarray(prompt)
+    if key is None:
+        key = jax.random.key(0)
+    run = _compiled_generate(model)
+    _count_dispatch()
+    return run(params, prompt, adapters, key, steps=int(steps),
+               max_len=int(max_len), temperature=float(temperature))
+
+
+def generate_banked(model, params, bank: AdapterBank, adapter_ids, prompt,
+                    steps: int, max_len: int, *, temperature: float = 0.0,
+                    key=None):
+    """Multi-tenant compiled generation: row i of ``prompt`` is served with
+    adapter ``adapter_ids[i]``.  The ids are traced, so one executable
+    covers every tenant mix; the bank leaves stay stacked and each
+    projection (or the BGMV kernel) gathers its own request rows."""
+    return generate(model, params, prompt, steps, max_len,
+                    adapters=bank.requests(adapter_ids),
+                    temperature=temperature, key=key)
+
+
+# ---------------------------------------------------------- host-loop oracle
+
+def generate_hostloop(model, params, prompt, steps: int, max_len: int,
+                      adapters=None):
+    """The pre-engine token-by-token loop (one jitted dispatch per token,
+    prompt fed through single-token decode steps) — kept as the parity
+    oracle for the compiled engine and as serve_bench's baseline.  Greedy
+    argmax slices to the real vocab exactly like the compiled engine, so
+    the two stay bit-comparable AND neither emits padded-vocab ids."""
     b, p = prompt.shape
+    vocab = model.cfg.vocab_size
     cache = model.init_cache(b, max_len)
     step = _jit_decode_step(model)
     tok = prompt[:, :1]
     out = [tok]
     for t in range(p + steps - 1):
+        _count_dispatch()
         logits, cache = step(params, cache, tok, jnp.full((b,), t),
                              adapters)
         nxt = (prompt[:, t + 1:t + 2] if t + 1 < p
-               else jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
+               else jnp.argmax(logits[:, -1:, :vocab],
+                               -1).astype(jnp.int32))
         out.append(nxt)
         tok = nxt
     return jnp.concatenate(out, axis=1)
 
 
-def generate_banked(model, params, bank: AdapterBank, adapter_ids, prompt,
-                    steps: int, max_len: int):
-    """Multi-tenant greedy decode: row i of ``prompt`` is served with
-    adapter ``adapter_ids[i]``.  The gather happens INSIDE the compiled
-    step, so one executable covers every tenant mix (ids are traced)."""
+def generate_banked_hostloop(model, params, bank: AdapterBank, adapter_ids,
+                             prompt, steps: int, max_len: int):
+    """Host-loop oracle for the bank path (materialized per-step gather)."""
     b, p = prompt.shape
+    vocab = model.cfg.vocab_size
     cache = model.init_cache(b, max_len)
     step = _jit_banked_step(model)
     ids = jnp.asarray(adapter_ids, jnp.int32)
     tok = prompt[:, :1]
     out = [tok]
     for t in range(p + steps - 1):
+        _count_dispatch()
         logits, cache = step(params, cache, tok, jnp.full((b,), t), bank, ids)
         nxt = (prompt[:, t + 1:t + 2] if t + 1 < p
-               else jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
+               else jnp.argmax(logits[:, -1:, :vocab],
+                               -1).astype(jnp.int32))
         out.append(nxt)
         tok = nxt
     return jnp.concatenate(out, axis=1)
 
+
+# ------------------------------------------------------------------ CLI
 
 def build_bank(args, cfg, model):
     """AdapterBank from a checkpoint (``--resume``) or fresh random sets.
@@ -130,6 +285,8 @@ def main(argv=None):
                     choices=("lora", "rslora", "sfedlora", "za", "zb"))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples inside the compiled scan")
     ap.add_argument("--clients", type=int, default=4,
                     help="tenant count for a fresh bank (ignored with "
                          "--resume: every checkpointed client serves)")
@@ -154,23 +311,32 @@ def main(argv=None):
 
     if args.merge is not None:
         merged = bank.adapter(args.merge).merge(base)
+        seq = generate(model, merged, prompt, args.steps, max_len,
+                       temperature=args.temperature)  # warm-up + compile
         t0 = time.time()
-        seq = generate(model, merged, prompt, args.steps, max_len)
+        seq = jax.block_until_ready(
+            generate(model, merged, prompt, args.steps, max_len,
+                     temperature=args.temperature))
         dt = time.time() - t0
         print(f"# {args.arch} merged tenant {args.merge}: "
               f"batch={args.batch} steps={args.steps}  "
-              f"{dt*1000/args.steps:.1f} ms/token")
+              f"{dt*1000/args.steps:.1f} ms/token (compiled engine)")
         print(seq[:, :12])
         return seq
 
     ids = jnp.arange(args.batch) % bank.size
+    seq = generate_banked(model, base, bank, ids, prompt, args.steps,
+                          max_len, temperature=args.temperature)
     t0 = time.time()
-    seq = generate_banked(model, base, bank, ids, prompt, args.steps, max_len)
+    seq = jax.block_until_ready(
+        generate_banked(model, base, bank, ids, prompt, args.steps, max_len,
+                        temperature=args.temperature))
     dt = time.time() - t0
     print(f"# {args.arch} banked decode: {bank.size} tenants "
           f"(ranks {','.join(str(r) for r in bank.ranks)}), "
           f"batch={args.batch} steps={args.steps}  "
-          f"{dt*1000/args.steps:.1f} ms/token")
+          f"{dt*1000/args.steps:.1f} ms/token (compiled engine, "
+          f"1 dispatch/call)")
     print(seq[:, :12])
     return seq
 

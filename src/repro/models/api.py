@@ -9,9 +9,10 @@ import jax.numpy as jnp
 from repro.core.lora import as_adapter_set
 from repro.kernels import dispatch
 from repro.models.layers import norm_params, apply_norm
-from repro.models.transformer import (apply_stack, batched_scan_layout,
-                                      decode_stack, init_stack,
-                                      init_stack_cache)
+from repro.models.transformer import (apply_stack, banked_scan_layout,
+                                      batched_scan_layout, decode_stack,
+                                      init_stack, init_stack_cache,
+                                      prefill_stack)
 
 PATCH_EMBED_DIM = 1152   # SigLIP stub output width (arXiv:2407.07726)
 
@@ -81,7 +82,9 @@ class Model:
         prepared = adapters.prepared()
         tree = (prepared.lora or {}).get("stack")
         if adapters.batched and tree:
-            tree = batched_scan_layout(tree)
+            tree = (banked_scan_layout(tree, adapters.ids)
+                    if adapters.ids is not None else
+                    batched_scan_layout(tree))
         return tree
 
     def forward(self, params, batch, adapters=None, *, lora=None, gamma=None):
@@ -192,6 +195,41 @@ class Model:
         dtype = dtype or jnp.dtype(cfg.dtype)
         cross = cfg.encoder_frames if cfg.family == "audio" else 0
         return init_stack_cache(cfg, batch, max_len, dtype, cross_len=cross)
+
+    def prefill(self, params, cache, tokens, adapters=None, *, enc_out=None,
+                last_only=False):
+        """Whole-prompt forward that fills a FRESH cache in one batched
+        pass: tokens (b, p) int32 -> (logits (b, p, V), new_cache).
+        ``last_only=True`` projects only the final position through the
+        lm head (logits (b, 1, V)) — generation consumes just that row, and
+        at real vocab scale the head GEMM over every prompt position is the
+        prefill's dominant wasted work.
+
+        The cache comes back as ``p`` sequential :meth:`decode_step` calls
+        would have left it (KV ring-buffer slots, recurrence states, conv
+        tails), so generation is one prefill + a decode loop instead of
+        feeding the prompt through single-token steps.  ``adapters`` as in
+        decode_step — None, an AdapterSet, or a banked per-request set from
+        ``AdapterBank.gather``/``requests``.  Encoder-decoder (audio)
+        models pass the encoder output as ``enc_out`` so the per-layer
+        cross K/V land in the cache."""
+        adapters = as_adapter_set(adapters)
+        cfg = self.cfg
+        with dispatch.scope(cfg.use_pallas):
+            x = jnp.take(params["embed"], tokens,
+                         axis=0).astype(jnp.dtype(cfg.dtype))
+            b, s, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+            x, _, new_cache = prefill_stack(
+                cfg, params["stack"], cache, x, positions,
+                adapters=self._stack_adapters(adapters), enc_out=enc_out)
+            x = apply_norm(cfg, x, params, "final")
+            if last_only:
+                x = x[:, -1:]
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = x @ head.astype(x.dtype)
+        return logits, new_cache
 
     def decode_step(self, params, cache, token, pos, adapters=None, *,
                     lora=None, gamma=None):

@@ -199,6 +199,44 @@ def attention_fullseq(cfg, params, x, *, causal=True, adapters=None,
     return linear(out.reshape(b, s, -1), params["o"], lo)
 
 
+# ----------------------------------------------------------------- KV cache prefill
+
+def fill_kv_cache(cache, k, v, positions):
+    """Write a whole prompt's K/V rows into the ring-buffer cache at the
+    slots the token-by-token decode would have used (``pos % size``).  When
+    the prompt overflows a sliding-window cache, only the last ``size``
+    positions land — exactly the survivors of sequential ring writes."""
+    size = cache["k"].shape[1]
+    if k.shape[1] > size:
+        k, v, positions = k[:, -size:], v[:, -size:], positions[:, -size:]
+    slots = positions % size
+    bidx = jnp.arange(k.shape[0])[:, None]
+    return {"k": cache["k"].at[bidx, slots].set(k),
+            "v": cache["v"].at[bidx, slots].set(v),
+            "pos": cache["pos"].at[bidx, slots].set(positions)}
+
+
+def attention_prefill(cfg, params, x, cache, positions, *, adapters=None):
+    """Whole-prompt attention that also fills the KV cache — the batched
+    form of running ``attention_decode`` once per prompt token on a FRESH
+    cache.  x (b, s, d), positions (b, s).  Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, adapters=adapters,
+                           positions=positions, kv_positions=positions)
+    new_cache = fill_kv_cache(cache, k, v, positions)
+    win = cfg.attn_window
+    q, k, v = _maybe_expand_kv(cfg, q, k, v)
+    if s > BLOCKWISE_THRESHOLD:
+        out = blockwise_attention(cfg, q, k, v, positions, positions,
+                                  causal=True, window=win)
+    else:
+        mask = make_mask(positions, positions, causal=True, window=win)
+        out = attention_core(cfg, q, k, v, mask)
+    y = linear(out.reshape(b, s, -1), params["o"],
+               (adapters or {}).get("o"))
+    return y, new_cache
+
+
 # ----------------------------------------------------------------- KV cache decode
 
 def init_kv_cache(cfg, batch: int, max_len: int, dtype):

@@ -88,6 +88,23 @@ def rglru_init_cache(cfg, batch, dtype):
             "conv_tail": jnp.zeros((batch, CONV_WIDTH - 1, dr), dtype)}
 
 
+def rglru_apply_prefill(cfg, params, x, cache, positions, adapters=None):
+    """Whole-prompt RG-LRU that also returns the decode cache: the
+    associative scan continues from ``cache`` (h0 + conv tail), and the
+    final recurrence state / trailing conv inputs become the new cache —
+    one batched pass instead of s sequential decode steps."""
+    from repro.models.layers import linear
+    xb = linear(x, params["wx"], (adapters or {}).get("wx"))
+    yb = linear(x, params["wy"], (adapters or {}).get("wy"))
+    xb, new_tail = _causal_conv(xb, params["conv"], cache["conv_tail"])
+    xf = xb.astype(jnp.float32)
+    a, b = _gates(params, xf)
+    h = rglru_scan(a, b, h0=cache["h"])
+    out = h * jax.nn.gelu(yb.astype(jnp.float32), approximate=True)
+    y = (out @ params["w_out"].astype(jnp.float32)).astype(x.dtype)
+    return y, {"h": h[:, -1], "conv_tail": new_tail}
+
+
 def rglru_apply_decode(cfg, params, x, cache, pos, adapters=None):
     """One-token step.  x (b,1,d)."""
     from repro.models.layers import linear

@@ -25,8 +25,9 @@ from repro.models import attention as attn_mod
 from repro.models import rglru as rglru_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import (attn_params, attention_fullseq,
-                                    attention_decode, init_kv_cache,
-                                    _project_qkv, attention_core, make_mask)
+                                    attention_decode, attention_prefill,
+                                    init_kv_cache, _project_qkv,
+                                    attention_core, make_mask)
 from repro.models.layers import (apply_norm, linear, mlp_apply, mlp_params,
                                  norm_params)
 from repro.models.moe import moe_apply, moe_params
@@ -109,24 +110,37 @@ def build_cross_kv(cfg, p_cross, enc_out):
 def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
                 causal=True, mode="fullseq", cache=None, pos=None,
                 enc_out=None):
+    """``mode``: "fullseq" (train/encode — no cache), "prefill" (whole
+    prompt in one pass, cache filled as the token-by-token decode would
+    have), "decode" (one token against the cache).  Prefill and decode
+    return (x, aux, new_cache); fullseq returns (x, aux)."""
     adapters = adapters or {}
     aux = jnp.zeros((), jnp.float32)
     h1 = apply_norm(cfg, x, p, "ln1")
     new_cache = None
 
     if kind in ("attn", "xattn"):
+        self_cache = (None if cache is None
+                      else cache["self"] if kind == "xattn" else cache)
         if mode == "fullseq":
             a = attention_fullseq(cfg, p["attn"], h1, causal=causal,
                                   adapters=adapters.get("attn"),
                                   positions=positions)
+        elif mode == "prefill":
+            a, self_cache = attention_prefill(
+                cfg, p["attn"], h1, self_cache, positions,
+                adapters=adapters.get("attn"))
         else:
             a, self_cache = attention_decode(
-                cfg, p["attn"], h1, cache["self"] if kind == "xattn" else cache,
+                cfg, p["attn"], h1, self_cache,
                 pos, adapters=adapters.get("attn"))
         x = x + a
         if kind == "xattn":
             hx = apply_norm(cfg, x, p, "lnx")
-            if mode == "decode":
+            if mode == "decode" or (mode == "prefill" and enc_out is None):
+                # decode reads the cache's cross K/V; prefill without an
+                # encoder output keeps them too (the token-by-token path's
+                # semantics: a fresh cache cross-attends zeros)
                 ck, cv = cache["cross_k"], cache["cross_v"]
             else:
                 ck, cv = build_cross_kv(cfg, p["cross"], enc_out)
@@ -140,15 +154,17 @@ def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
         else:
             x = x + mlp_apply(cfg, p["mlp"], h2,
                               adapters=adapters.get("mlp"))
-        if mode == "decode":
-            new_cache = ({"self": self_cache, "cross_k": cache["cross_k"],
-                          "cross_v": cache["cross_v"]} if kind == "xattn"
-                         else self_cache)
+        if mode != "fullseq":
+            new_cache = ({"self": self_cache, "cross_k": ck, "cross_v": cv}
+                         if kind == "xattn" else self_cache)
 
     elif kind == "rglru":
         if mode == "fullseq":
             r = rglru_mod.rglru_apply_fullseq(cfg, p["rglru"], h1,
                                               adapters.get("rglru"))
+        elif mode == "prefill":
+            r, new_cache = rglru_mod.rglru_apply_prefill(
+                cfg, p["rglru"], h1, cache, positions, adapters.get("rglru"))
         else:
             r, new_cache = rglru_mod.rglru_apply_decode(
                 cfg, p["rglru"], h1, cache, pos, adapters.get("rglru"))
@@ -160,6 +176,9 @@ def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
         if mode == "fullseq":
             m = xlstm_mod.mlstm_apply_fullseq(cfg, p["mlstm"], h1,
                                               adapters.get("mlstm"))
+        elif mode == "prefill":
+            m, new_cache = xlstm_mod.mlstm_apply_prefill(
+                cfg, p["mlstm"], h1, cache, positions, adapters.get("mlstm"))
         else:
             m, new_cache = xlstm_mod.mlstm_apply_decode(
                 cfg, p["mlstm"], h1, cache, pos, adapters.get("mlstm"))
@@ -169,6 +188,9 @@ def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
         if mode == "fullseq":
             s_ = xlstm_mod.slstm_apply_fullseq(cfg, p["slstm"], h1,
                                                adapters.get("slstm"))
+        elif mode == "prefill":
+            s_, new_cache = xlstm_mod.slstm_apply_prefill(
+                cfg, p["slstm"], h1, cache, positions, adapters.get("slstm"))
         else:
             s_, new_cache = xlstm_mod.slstm_apply_decode(
                 cfg, p["slstm"], h1, cache, pos, adapters.get("slstm"))
@@ -281,6 +303,51 @@ def _tail_kinds(cfg, pattern, stack_params):
     return tuple(pattern[:n_tail])
 
 
+def prefill_stack(cfg, stack_params, cache, x, positions, *, adapters=None,
+                  pattern=None, enc_out=None):
+    """Whole-prompt forward that also fills every block cache in ONE pass —
+    the batched replacement for feeding the prompt through single-token
+    decode steps.  Returns (x, aux_sum, new_cache); the cache comes back
+    exactly as the token-by-token decode would have left it (KV ring-buffer
+    slots, recurrence states, conv tails)."""
+    pattern = pattern or cfg.block_pattern
+    adapters = adapters or {}
+    rep_p = stack_params.get("repeat", {})
+    rep_lora = adapters.get("repeat") or _empty_like_stack(rep_p)
+
+    def scan_body(h, xs):
+        ps, los, cs = xs
+        new_cs = {}
+        aux = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(pattern):
+            h, a, nc = apply_block(cfg, kind, ps[f"p{j}"], h,
+                                   adapters=los.get(f"p{j}"),
+                                   positions=positions, mode="prefill",
+                                   cache=cs[f"p{j}"], enc_out=enc_out)
+            new_cs[f"p{j}"] = nc
+            aux = aux + a
+        return h, (new_cs, aux)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"repeat": {}, "tail": {}}
+    if rep_p:
+        n_rep = jax.tree.leaves(rep_p)[0].shape[0]
+        x, (new_cache["repeat"], auxs) = jax.lax.scan(
+            scan_body, x, (rep_p, rep_lora, cache["repeat"]),
+            unroll=scan_unroll(n_rep))
+        aux_total = aux_total + auxs.sum()
+    kinds = _tail_kinds(cfg, pattern, stack_params)
+    for i, kind in enumerate(kinds):
+        key = f"t{i}"
+        x, a, nc = apply_block(cfg, kind, stack_params["tail"][key], x,
+                               adapters=(adapters.get("tail") or {}).get(key),
+                               positions=positions, mode="prefill",
+                               cache=cache["tail"][key], enc_out=enc_out)
+        new_cache["tail"][key] = nc
+        aux_total = aux_total + a
+    return x, aux_total, new_cache
+
+
 def decode_stack(cfg, stack_params, cache, x, pos, *, adapters=None,
                  pattern=None):
     """One-token decode through the stack.  Returns (x, new_cache)."""
@@ -335,4 +402,43 @@ def batched_scan_layout(stack_adapters):
     rep = stack_adapters.get("repeat")
     if rep:
         out["repeat"] = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), rep)
+    return out
+
+
+def _attach_ids(tree, ids):
+    """Insert the request->tenant map into every adapter node of a LAZY bank
+    tree: ``{"a", "b"}`` nodes become ``{"a", "b", "ids"}`` — the layout the
+    dispatch layer's banked path consumes."""
+    def walk(node):
+        if isinstance(node, dict):
+            if node and set(node) <= {"a", "b"}:
+                return {**node, "ids": ids}
+            return {k: walk(v) for k, v in node.items()}
+        return node
+    return walk(tree)
+
+
+def banked_scan_layout(stack_adapters, ids):
+    """Scan layout for a LAZY bank tree (``AdapterBank.requests``): leaves
+    stay tenant-stacked ``(K, ...)`` and ``ids`` (B,) maps batch rows to
+    tenants.
+
+    Repeat leaves ``(K, layers, ...)`` swap to ``(layers, K, ...)`` so the
+    layer scans slice one ``(K, ...)`` bank page per layer; ``ids``
+    broadcasts to ``(layers, B)`` so every scan step carries the same
+    request map.  The bank itself is never gathered here — each projection
+    gathers (or the BGMV kernel's index_map does) from its own ``(K, ...)``
+    page."""
+    if not stack_adapters:
+        return stack_adapters
+    out = dict(stack_adapters)
+    rep = stack_adapters.get("repeat")
+    if rep:
+        swapped = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), rep)
+        n_rep = jax.tree.leaves(swapped)[0].shape[0]
+        out["repeat"] = _attach_ids(
+            swapped, jnp.broadcast_to(ids, (n_rep,) + ids.shape))
+    tail = stack_adapters.get("tail")
+    if tail:
+        out["tail"] = _attach_ids(tail, ids)
     return out

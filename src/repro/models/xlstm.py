@@ -49,9 +49,11 @@ def _mlstm_qkv(cfg, params, x, adapters):
 MLSTM_CHUNK = 256
 
 
-def mlstm_apply_fullseq(cfg, params, x, adapters=None):
+def _mlstm_fullseq(cfg, params, x, adapters=None, carry0=None):
     """Stabilized chunkwise-parallel form: within-chunk O(C^2) on the MXU,
-    across-chunk recurrent matrix-memory carry (scan).  x (b,s,d)."""
+    across-chunk recurrent matrix-memory carry (scan).  x (b,s,d).
+    Returns (out, final_carry) — the carry after the LAST REAL token, so
+    prefill can hand it to the recurrent decode form as the cache."""
     b, s, d = x.shape
     h, hd = cfg.num_heads, cfg.head_dim
     q, k, v = _mlstm_qkv(cfg, params, x, adapters)
@@ -64,8 +66,14 @@ def mlstm_apply_fullseq(cfg, params, x, adapters=None):
     pad = (-s) % c
     if pad:
         zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
-        q, k, v, log_i, log_f = map(zpad, (q, k, v, log_i, log_f))
-        # padded forget-gates ~ 0 decay keeps state finite; outputs sliced off
+        q, k, v, log_f = map(zpad, (q, k, v, log_f))
+        # identity-safe padding: pad forget gates decay 0 (log_f = 0) and
+        # pad input gates -inf (log_i = -1e30), so pad tokens neither decay
+        # nor write the carried state — the final carry is exactly the state
+        # after the last real token.  Real-position outputs are causal and
+        # unaffected either way; pad outputs are sliced off.
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
     nc = q.shape[1] // c
     chunked = lambda a: a.reshape(b, nc, c, *a.shape[2:]).swapaxes(0, 1)
     qc, kc, vc, lic, lfc = map(chunked, (q, k, v, log_i, log_f))
@@ -103,19 +111,32 @@ def mlstm_apply_fullseq(cfg, params, x, adapters=None):
         n_new = carry_w[..., None] * n_st + jnp.einsum("buh,buhd->bhd", kw, kb)
         return (C_new, n_new, m_new), out
 
-    carry0 = (jnp.zeros((b, h, hd, hd), jnp.float32),
-              jnp.zeros((b, h, hd), jnp.float32),
-              jnp.full((b, h), -1e30, jnp.float32))
+    if carry0 is None:
+        carry0 = (jnp.zeros((b, h, hd, hd), jnp.float32),
+                  jnp.zeros((b, h, hd), jnp.float32),
+                  jnp.full((b, h), -1e30, jnp.float32))
     # NOTE: deliberately NOT unrolled under FULL_UNROLL — at 32k tokens the
     # 128-chunk unroll explodes compile time, and the intra-chunk O(C^2) part
     # it would make countable is <=5% of mLSTM flops (projections dominate).
     # The dry-run calibration documents this as a known <=5% undercount.
-    _, outs = jax.lax.scan(jax.checkpoint(chunk_step), carry0,
-                           (qc, kc, vc, lic, lfc))
+    carry, outs = jax.lax.scan(jax.checkpoint(chunk_step), carry0,
+                               (qc, kc, vc, lic, lfc))
     out = outs.swapaxes(0, 1).reshape(b, nc * c, h, hd)[:, :s]
     ogate = jax.nn.sigmoid(xf @ params["ogate"].astype(jnp.float32))
     out = out.reshape(b, s, -1) * ogate
-    return (out @ params["o"].astype(jnp.float32)).astype(x.dtype)
+    return (out @ params["o"].astype(jnp.float32)).astype(x.dtype), carry
+
+
+def mlstm_apply_fullseq(cfg, params, x, adapters=None):
+    return _mlstm_fullseq(cfg, params, x, adapters)[0]
+
+
+def mlstm_apply_prefill(cfg, params, x, cache, positions, adapters=None):
+    """Whole-prompt mLSTM continuing from ``cache``; the chunk scan's final
+    carry (exact thanks to identity-safe padding) becomes the decode cache."""
+    out, (C, n, m) = _mlstm_fullseq(
+        cfg, params, x, adapters, carry0=(cache["C"], cache["n"], cache["m"]))
+    return out, {"C": C, "n": n, "m": m}
 
 
 def mlstm_init_cache(cfg, batch, dtype):
@@ -202,20 +223,34 @@ def _slstm_gate_inputs(params, x):
     return jnp.stack(gates, axis=-2)          # (b, s, 4, d)
 
 
-def slstm_apply_fullseq(cfg, params, x, adapters=None):
-    from repro.models.layers import linear
+def _slstm_fullseq(cfg, params, x, adapters=None, carry=None):
     b, s, d = x.shape
     gi = _slstm_gate_inputs(params, x)
     if adapters is not None and "z" in adapters:
         # gate-input adapter (prepared form: scale already folded into B)
         za, zb = adapters["z"]["a"], adapters["z"]["b"]
         gi = gi.at[:, :, 0].add((x @ za.T) @ zb.T)
-    carry = (jnp.zeros((b, d), jnp.float32),) * 2 + (
-        jnp.full((b, d), 1e-6, jnp.float32), jnp.full((b, d), -1e30, jnp.float32))
+    if carry is None:
+        carry = (jnp.zeros((b, d), jnp.float32),) * 2 + (
+            jnp.full((b, d), 1e-6, jnp.float32),
+            jnp.full((b, d), -1e30, jnp.float32))
     step = lambda c, xt: _slstm_step(cfg, params, c, xt)
-    _, hs = jax.lax.scan(step, carry, jnp.swapaxes(gi, 0, 1))
+    carry, hs = jax.lax.scan(step, carry, jnp.swapaxes(gi, 0, 1))
     h = jnp.swapaxes(hs, 0, 1)                # (b, s, d)
-    return (h @ params["w_proj"].astype(jnp.float32)).astype(x.dtype)
+    return (h @ params["w_proj"].astype(jnp.float32)).astype(x.dtype), carry
+
+
+def slstm_apply_fullseq(cfg, params, x, adapters=None):
+    return _slstm_fullseq(cfg, params, x, adapters)[0]
+
+
+def slstm_apply_prefill(cfg, params, x, cache, positions, adapters=None):
+    """Whole-prompt sLSTM continuing from ``cache``; the scan carry IS the
+    decode cache, so prefill-then-decode matches the sequential path."""
+    out, (h, c, n, m) = _slstm_fullseq(
+        cfg, params, x, adapters,
+        carry=(cache["h"], cache["c"], cache["n"], cache["m"]))
+    return out, {"h": h, "c": c, "n": n, "m": m}
 
 
 def slstm_init_cache(cfg, batch, dtype):
