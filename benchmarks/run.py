@@ -2,14 +2,83 @@
 
 ``python -m benchmarks.run``           runs everything (CSV to stdout)
 ``python -m benchmarks.run fig2 fig8`` runs a subset
+``python -m benchmarks.run table``     cross-PR trajectory of BENCH_*.json
 ``FAST=1``                             shortens training benches
 """
+import glob
+import json
 import os
+import subprocess
 import sys
 import time
 
 SUITES = ("comm", "kernels", "engine", "serve", "roofline", "fig9", "fig3",
-          "fig2", "fig4", "fig8", "tab12")
+          "fig2", "fig4", "fig8", "tab12", "table")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _flatten(obj, prefix=""):
+    """Dotted-path numeric scalars of a nested benchmark dict."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix.rstrip(".")] = obj
+    return out
+
+
+def _git(*args):
+    """Run git in the repo root; returns stdout or None on any failure."""
+    try:
+        proc = subprocess.run(["git", *args], cwd=ROOT, capture_output=True,
+                              text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    return proc.stdout if proc.returncode == 0 else None
+
+
+def trajectory() -> None:
+    """Cross-PR trajectory table aggregated from repo-root ``BENCH_*.json``.
+
+    Each benchmark run that lands in a PR rewrites its ``BENCH_<suite>.json``
+    at the repo root, so git history holds one snapshot per PR.  This walks
+    every committed revision of every ``BENCH_*.json`` (oldest first), adds
+    the current working tree, flattens each snapshot to dotted scalar
+    metrics, and prints one CSV row per metric:
+
+        trajectory,<file>,<rev>,<metric>,<value>
+
+    Revisions that fail to parse (or a missing git repo) are skipped — the
+    working-tree snapshot alone still prints.
+    """
+    print("trajectory,file,rev,metric,value")
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        snapshots = []
+        revs = (_git("log", "--reverse", "--format=%h", "--", name) or "").split()
+        for rev in revs:
+            blob = _git("show", f"{rev}:{name}")
+            if blob is None:
+                continue
+            try:
+                snapshots.append((rev, json.loads(blob)))
+            except ValueError:
+                continue
+        try:
+            with open(path) as f:
+                worktree = json.load(f)
+        except (OSError, ValueError):
+            worktree = None
+        if worktree is not None:
+            if snapshots and snapshots[-1][1] == worktree:
+                pass  # tree matches HEAD's snapshot; don't duplicate the row
+            else:
+                snapshots.append(("worktree", worktree))
+        for rev, snap in snapshots:
+            for metric, value in sorted(_flatten(snap).items()):
+                print(f"trajectory,{name},{rev},{metric},{value:g}")
 
 
 def main() -> None:
@@ -69,6 +138,8 @@ def main() -> None:
         from benchmarks import tab12_accuracy
         run("tab12_accuracy", tab12_accuracy.main,
             **({"rounds": rounds} if rounds else {}))
+    if "table" in want:
+        run("trajectory", trajectory)
 
 
 if __name__ == "__main__":

@@ -38,7 +38,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -58,28 +57,7 @@ def participation_weights(key, num_clients: int, num_sampled: int):
     return jnp.zeros((num_clients,), jnp.float32).at[perm[:num_sampled]].set(1.0)
 
 
-def _legacy_engine_shim(builder, new_fn, gamma, rank_mask):
-    """Deprecated ``gamma=``/``rank_mask=`` engine surface: wrap the
-    AdapterSet-native function so legacy callers keep their raw-tree
-    signature (bit-identical — same code underneath)."""
-    warnings.warn(
-        f"deprecated adapter API: {builder}(gamma=..., rank_mask=...) — "
-        "the scaling factor and rank mask now travel WITH the state as an "
-        "AdapterSet; build the engine without them and pass "
-        "AdapterSet(lora=..., gamma=..., rank_mask=...)",
-        DeprecationWarning, stacklevel=3)
-    template = AdapterSet(lora=None, gamma=gamma,
-                          rank_mask=None if rank_mask is None
-                          else jnp.asarray(rank_mask, jnp.float32))
-
-    def wrapped(base, lora_N, opt_N, *args, **kwargs):
-        aset = dataclasses.replace(template, lora=lora_N)
-        out = new_fn(base, aset, opt_N, *args, **kwargs)
-        return (out[0].lora,) + out[1:]
-    return wrapped
-
-
-def make_round_body(model, *, strategy, opt_cfg, gamma=None, rank_mask=None):
+def make_round_body(model, *, strategy, opt_cfg):
     """Returns round_body(base, adapters, opt_N, batches, round_idx, weights).
 
     ``adapters`` is a client-stacked :class:`AdapterSet`: its ``lora`` tree
@@ -100,9 +78,6 @@ def make_round_body(model, *, strategy, opt_cfg, gamma=None, rank_mask=None):
         ranks in the padded representation: client gradients are masked to
         the active rank rows and the server aggregate is rank-aware (see
         ``core/aggregation``).
-
-    ``gamma=``/``rank_mask=`` kwargs are a deprecated shim: they return a
-    wrapper with the old raw-lora-tree signature.
     """
     strat = get_strategy(strategy)
     _, opt_update = make_optimizer(opt_cfg)
@@ -165,32 +140,25 @@ def make_round_body(model, *, strategy, opt_cfg, gamma=None, rank_mask=None):
         metrics = {"loss": ms["loss"].mean(), "grad_norm": ms["grad_norm"].mean()}
         return dataclasses.replace(adapters, lora=new_lora), new_opt, metrics
 
-    if gamma is not None or rank_mask is not None:
-        return _legacy_engine_shim("make_round_body", round_body, gamma,
-                                   rank_mask)
     return round_body
 
 
-def make_fed_round_step(model, *, strategy, opt_cfg, gamma=None,
-                        rank_mask=None, donate: bool = True,
+def make_fed_round_step(model, *, strategy, opt_cfg, donate: bool = True,
                         jit: bool = True):
     """Single-round entry point (back-compat shim over the round body).
 
     Returns round_step(base, adapters, opt_N, batches, round_idx, weights).
     With ``jit=False`` returns the raw function (multi-device tests wrap it
-    in their own pjit with explicit shardings).  ``gamma=``/``rank_mask=``
-    are the deprecated raw-tree shim (see :func:`make_round_body`).
+    in their own pjit with explicit shardings).
     """
-    round_step = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
-                                 gamma=gamma, rank_mask=rank_mask)
+    round_step = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg)
     if not jit:
         return round_step
     return jax.jit(round_step, donate_argnums=(1, 2) if donate else ())
 
 
-def make_run_chunk(model, *, strategy, opt_cfg, gamma=None,
-                   participation: float = 1.0, batch_fn=None,
-                   rank_mask=None, client_weights=None,
+def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
+                   batch_fn=None, client_weights=None,
                    donate: bool = True, jit: bool = True):
     """Build the chunked scan executor.
 
@@ -198,8 +166,7 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma=None,
     num_rounds=None) -> (adapters, opt_N, key, metrics), where ``adapters``
     is the client-stacked :class:`AdapterSet` the scan carries (A/B tree +
     gamma(s) + rank mask as ONE pytree — the scaling config cannot
-    desynchronize from the state it scales).  ``gamma=``/``rank_mask=``
-    kwargs are the deprecated raw-tree shim (see :func:`make_round_body`).
+    desynchronize from the state it scales).
 
       - ``key``     carried PRNG key; split once per round inside the scan
                     (participation sampling and on-device batch synthesis
@@ -263,9 +230,6 @@ def make_run_chunk(model, *, strategy, opt_cfg, gamma=None,
             scan_step, (adapters, opt_N, key), xs)
         return adapters, opt_N, key, ms
 
-    if gamma is not None or rank_mask is not None:
-        run_chunk = _legacy_engine_shim("make_run_chunk", run_chunk, gamma,
-                                        rank_mask)
     if not jit:
         return run_chunk
     return jax.jit(run_chunk, static_argnames=("num_rounds",),

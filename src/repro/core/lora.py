@@ -568,27 +568,15 @@ jax.tree_util.register_pytree_node(
     lambda aux, ch: AdapterBank(lora=ch[0], rank_mask=ch[1], ranks=aux[0]))
 
 
-def as_adapter_set(adapters, *, lora=None, gamma=None,
-                   default_gamma: float = 0.0):
-    """Normalize an ``adapters=`` argument, upgrading the deprecated
-    ``lora=``/``gamma=`` kwargs to an AdapterSet (the shim's single home).
+def as_adapter_set(adapters):
+    """Normalize an ``adapters=`` argument.
 
     Returns None when no adapters were given.  A raw A/B dict passed as
-    ``adapters`` is wrapped with scale 1 (it is already a prepared tree)."""
-    if adapters is not None and (lora is not None or gamma is not None):
-        raise TypeError(
-            "pass either adapters=AdapterSet(...) or the deprecated "
-            "lora=/gamma= kwargs, not both")
+    ``adapters`` is wrapped with scale 1 (it is already a prepared tree).
+    (The PR 4 ``lora=``/``gamma=`` kwarg shim lived here for one release
+    and is gone — pass an AdapterSet.)"""
     if adapters is None:
-        if lora is None:
-            return None
-        import warnings
-        warnings.warn(
-            "deprecated adapter API: lora=/gamma= kwargs — pass "
-            "adapters=AdapterSet(lora=..., gamma=...) instead",
-            DeprecationWarning, stacklevel=3)
-        return AdapterSet(lora=lora,
-                          gamma=default_gamma if gamma is None else gamma)
+        return None
     if isinstance(adapters, AdapterSet):
         return adapters
     return AdapterSet(lora=adapters)

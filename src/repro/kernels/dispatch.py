@@ -60,7 +60,7 @@ _forced = contextvars.ContextVar("repro_forced_mode", default=None)
 # single-threaded tests/debugging only — cached jit calls don't re-count,
 # and concurrent traces share it.  Routing correctness itself is isolated
 # via the contextvars above.
-stats = {"fused": 0, "reference": 0, "batched": 0, "bgmv": 0}
+stats = {"fused": 0, "reference": 0, "batched": 0, "bgmv": 0, "paged": 0}
 
 
 def reset_stats() -> None:

@@ -34,6 +34,34 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, pos_pool, table, qpos, *,
+                        window=None, softcap=None):
+    """Exact-softmax oracle for the paged-attention decode kernel.
+
+    q (b, h, hd) one token per request; k_pool/v_pool (P, bs, kh, hd);
+    pos_pool (P, bs) int32 (-1 == never written); table (b, mb) int32 maps
+    request i's virtual block j to a pool block; qpos (b,) absolute query
+    positions.  Returns (b, h, hd) in q.dtype."""
+    b, h, hd = q.shape
+    _, bs, kh, _ = k_pool.shape
+    mb = table.shape[1]
+    g = h // kh
+    k = k_pool[table].reshape(b, mb * bs, kh, hd).astype(jnp.float32)
+    v = v_pool[table].reshape(b, mb * bs, kh, hd).astype(jnp.float32)
+    pos = pos_pool[table].reshape(b, mb * bs)
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k) * hd ** -0.5
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    valid = (pos >= 0) & (pos <= qpos[:, None])
+    if window is not None:
+        valid &= qpos[:, None] - pos < window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def rglru_scan_ref(a, b, h0=None):
     """Sequential reference for h_t = a_t * h_{t-1} + b_t.  a, b (bt, s, d)."""
     bt, s, d = a.shape

@@ -177,6 +177,10 @@ def _compile_stats(arch, shape_name, mesh, rank, alpha, *, num_layers=None,
         attn.Q_BLOCK, attn.KV_BLOCK = prev_blk
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax returns one dict per device program here for some executables
+    # (observed on the scanned train shapes); they are identical copies.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     coll, counts = collective_bytes(compiled.as_text())
     rec = {
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),

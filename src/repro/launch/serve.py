@@ -31,16 +31,20 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.io import load_adapter_state
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LoRAConfig
 from repro.core.lora import AdapterBank, AdapterSet, init_adapter_set
 from repro.models.api import build_model
+from repro.models.transformer import (merge_paged_cache, paged_prefill_view,
+                                      reset_paged_blocks)
 
 # Host->device dispatch meter: every jitted call the generation helpers make
 # increments this (serve_bench reports it; a compiled generate is exactly 1).
@@ -96,6 +100,27 @@ def _jit_banked_step(model):
 
 # ------------------------------------------------------------ compiled engine
 
+def _prepare_adapters(m, adapters):
+    """Loop-invariant adapter preparation, shared by every compiled engine
+    entry point: gamma folds, rank masking, the bank's per-request gather,
+    and the (K, layers) -> (layers, K) scan relayout all run ONCE per
+    compiled call — left inside decode_step they re-run EVERY token (XLA
+    does not hoist the relayout transposes or gathers out of a scan;
+    together ~2MB of copies per step at bench scale).  The ids are fixed
+    for the whole call, so the lazy bank view materializes its request rows
+    here — one (B, ...) gather; decode_step then consumes a prepared
+    pass-through tree.  (The in-kernel BGMV gather still serves direct
+    decode_step/prefill callers, where ids change per step.)"""
+    if (adapters is not None and adapters.batched
+            and adapters.ids is not None):
+        adapters = dataclasses.replace(
+            adapters,
+            lora=jax.tree.map(lambda x: x[adapters.ids], adapters.lora),
+            ids=None)
+    tree = m._stack_adapters(adapters)
+    return None if tree is None else AdapterSet(lora={"stack": tree})
+
+
 def _sample(logits, key, temperature: float, vocab: int):
     """One next token per row from (b, V) logits.  ``temperature`` is a
     static float: 0.0 compiles to pure greedy (no RNG ops in the graph).
@@ -119,28 +144,7 @@ def _compiled_generate(model):
                 temperature):
             b, p = prompt.shape
             vocab = m.cfg.vocab_size
-            # Prepare the adapter tree ONCE per generation: gamma folds,
-            # rank masking, the bank's per-request gather, and the
-            # (K, layers) -> (layers, K) scan relayout are all
-            # loop-invariant, but left inside decode_step they re-run EVERY
-            # token (XLA does not hoist the relayout transposes or gathers
-            # out of the scan — together ~2MB of copies per step at bench
-            # scale).  The ids are fixed for the whole call, so the lazy
-            # bank view materializes its request rows here — one (B, ...)
-            # gather per generation; decode_step then consumes a prepared
-            # pass-through tree.  (The in-kernel BGMV gather still serves
-            # direct decode_step/prefill callers, where ids change per
-            # step.)
-            if (adapters is not None and adapters.batched
-                    and adapters.ids is not None):
-                adapters = dataclasses.replace(
-                    adapters,
-                    lora=jax.tree.map(lambda x: x[adapters.ids],
-                                      adapters.lora),
-                    ids=None)
-            tree = m._stack_adapters(adapters)
-            adapters = None if tree is None else AdapterSet(
-                lora={"stack": tree})
+            adapters = _prepare_adapters(m, adapters)
             cache = m.init_cache(b, max_len)
             logits, cache = m.prefill(params, cache, prompt, adapters,
                                       last_only=True)
@@ -247,6 +251,300 @@ def generate_banked_hostloop(model, params, bank: AdapterBank, adapter_ids,
     return jnp.concatenate(out, axis=1)
 
 
+# ----------------------------------------------- continuous-batching scheduler
+#
+# The fixed-batch engine above serves ONE batch per compiled call: every
+# request in the batch starts together, decodes in lockstep, and the whole
+# batch holds its ring-buffer KV cache until the LAST request finishes.  At
+# mixed lengths / staggered arrivals that is the classic head-of-line
+# problem: a request arriving just after a batch launched waits a full
+# generation, and a short request pins its cache rows while long neighbors
+# drag on.
+#
+# The scheduler below serves a STREAM of requests through a paged engine:
+#
+#   * KV state lives in per-layer SHARED block pools (model.init_paged_cache)
+#     addressed through a per-slot block table — BlockPool hands blocks out
+#     and takes them back on the host, so a finished request's memory is
+#     reusable the moment it completes, not when its batch drains.
+#   * Decode runs in CHUNKS: one jitted lax.scan of `chunk` steps over all
+#     engine slots (active or not — idle slots' table rows point at the
+#     reserved null block 0, so their discarded writes land where no live
+#     request ever looks).  Between chunks the host admits newly-arrived
+#     requests into free slots and evicts finished ones.
+#   * Admission is one jitted prefill per same-length newcomer group on a
+#     VIEW whose pools ARE the engine pools and whose per-slot state is
+#     fresh (transformer.paged_prefill_view); merging scatters the
+#     newcomers' slot state back without touching continuing requests.
+#
+# At a static schedule (every request present at t=0, uniform shapes) the
+# admission group IS the fixed-engine batch and every chunk step runs the
+# same program on the same shapes, so scheduled greedy decode is
+# token-identical to `generate` on the gather tiers (tests/test_paged.py);
+# under staggered arrivals it trades nothing for the latency win that
+# benchmarks/serve_bench.py measures.
+
+
+class BlockPool:
+    """Host-side free-list allocator over the paged cache's block axis.
+
+    Block 0 is the NULL block: idle engine slots' table rows point at it,
+    so their discarded decode writes land in a block no live request owns.
+    It is never handed out — `alloc` serves blocks 1..num_blocks-1 only."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is the reserved null "
+                             f"block), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._held = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int):
+        """n blocks, or None if the pool can't cover them (caller defers
+        admission — nothing is partially allocated)."""
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._held.update(blocks)
+        return blocks
+
+    def free(self, blocks) -> None:
+        blocks = list(blocks)
+        bad = [b for b in blocks if b not in self._held]
+        if bad or len(set(blocks)) != len(blocks):
+            raise ValueError(f"freeing blocks not held (double free?): "
+                             f"{bad or blocks}")
+        for b in blocks:
+            self._held.discard(b)
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for the scheduler.  ``steps`` counts generated
+    tokens (prompt excluded), matching `generate`; ``arrival`` is seconds
+    from scheduler start.  The scheduler fills the bookkeeping fields:
+    ``tokens`` (the generated ids, first token included), ``t_first`` /
+    ``t_done`` (completion-relative timestamps for latency metrics)."""
+    rid: int
+    prompt: np.ndarray
+    steps: int
+    adapter_id: int = 0
+    arrival: float = 0.0
+    slot: int = -1
+    blocks: list = dataclasses.field(default_factory=list)
+    tokens: list = dataclasses.field(default_factory=list)
+    t_first: float | None = None
+    t_done: float | None = None
+
+
+def _jit_paged_admit(model):
+    """Jitted admission program: invalidate the newcomers' (possibly
+    recycled) blocks, prefill the same-length group on the shared-pool
+    view, scatter its per-slot state into the engine slots, and emit each
+    newcomer's first token.  One executable per (group, prompt) shape."""
+    def build(m):
+        def admit(params, cache, prompts, table_rows, slots, blocks,
+                  adapters):
+            g, _ = prompts.shape
+            vocab = m.cfg.vocab_size
+            adapters = _prepare_adapters(m, adapters)
+            cache = reset_paged_blocks(cache, blocks)
+            cross = (m.cfg.encoder_frames if m.cfg.family == "audio" else 0)
+            view = paged_prefill_view(m.cfg, cache, g,
+                                      jnp.dtype(m.cfg.dtype),
+                                      cross_len=cross)
+            logits, view = m.prefill(params, view, prompts, adapters,
+                                     last_only=True, table=table_rows)
+            cache = merge_paged_cache(cache, view, slots)
+            tok = jnp.argmax(logits[:, -1, :vocab], -1).astype(jnp.int32)
+            return cache, tok
+        return jax.jit(admit)
+    return _model_jit(model, "paged_admit", build)
+
+
+def _jit_paged_chunk(model):
+    """Jitted decode chunk: ``steps`` greedy tokens for every engine slot
+    in one lax.scan.  ``active`` gates token emission and position
+    advance; inactive slots still run (static shapes) but write into the
+    null block and their outputs are discarded host-side."""
+    def build(m):
+        def chunk_run(params, cache, tok, pos, active, table, adapters, *,
+                      steps):
+            vocab = m.cfg.vocab_size
+            adapters = _prepare_adapters(m, adapters)
+
+            def step(carry, _):
+                cache, tok, pos = carry
+                lg, cache = m.decode_step(params, cache, tok, pos, adapters,
+                                          table=table)
+                nxt = jnp.argmax(lg[:, -1, :vocab], -1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, 0)
+                pos = jnp.where(active, pos + 1, pos)
+                return (cache, nxt[:, None], pos), nxt
+
+            (cache, tok, pos), toks = jax.lax.scan(
+                step, (cache, tok, pos), None, length=steps)
+            return cache, tok, pos, toks.T
+        return jax.jit(chunk_run, static_argnames=("steps",))
+    return _model_jit(model, "paged_chunk", build)
+
+
+def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
+                    block_size=8, chunk=8, max_len=None, wait=True):
+    """Continuous-batching serve loop: admit / decode-chunk / evict until
+    every request completes.  Returns the requests (mutated in place —
+    ``tokens``, ``t_first``, ``t_done`` filled) sorted by rid.
+
+    ``requests``: Request list; arrivals are seconds from loop start and
+    are honored against the wall clock (``wait=False`` treats every
+    request as already arrived — deterministic tests).  ``bank``: optional
+    AdapterBank; each request's ``adapter_id`` names its tenant.
+    ``max_len`` bounds prompt+steps per request and sizes the per-request
+    block count; the pool holds exactly ``max_batch`` requests' worth of
+    blocks plus the null block, so admission can never deadlock behind
+    block starvation with a free slot."""
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    if not reqs:
+        return []
+    need = max(len(r.prompt) + r.steps for r in reqs)
+    max_len = max_len or need
+    win = model.cfg.attn_window
+    # a sliding-window model may wrap its virtual ring (vlen = blocks *
+    # block_size) exactly like the fixed engine's ring cache, as long as
+    # the ring still covers the window
+    if need > max_len and (win is None or max_len < win):
+        raise ValueError(f"request needs {need} positions > max_len "
+                         f"{max_len}")
+    # per-request virtual ring sized exactly like the fixed engine's ring
+    # cache (window-bounded), so the paged layout stays element-identical
+    ring = min(max_len, win) if win else max_len
+    mb = -(-ring // block_size)
+    pool = BlockPool(1 + max_batch * mb)
+    cache = model.init_paged_cache(pool.num_blocks, block_size, max_batch)
+    table = jnp.zeros((max_batch, mb), jnp.int32)
+    tok = jnp.zeros((max_batch, 1), jnp.int32)
+    pos = jnp.zeros((max_batch,), jnp.int32)
+    active = jnp.zeros((max_batch,), bool)
+    ids_arr = np.zeros((max_batch,), np.int32)
+    free_slots = list(range(max_batch))
+    admit = _jit_paged_admit(model)
+    chunk_run = _jit_paged_chunk(model)
+    t0 = time.monotonic()
+    clock = ((lambda: time.monotonic() - t0) if wait
+             else (lambda: float("inf")))
+    pending, running = list(reqs), []
+
+    def finish(r, now):
+        r.t_done = now
+        running.remove(r)
+        free_slots.append(r.slot)
+        free_slots.sort()
+        pool.free(r.blocks)
+        nonlocal active, table
+        active = active.at[r.slot].set(False)
+        table = table.at[r.slot].set(0)         # back to the null block
+
+    while pending or running:
+        now = clock()
+        # ---- admission: FIFO same-length groups into free slots.  The
+        # head of the queue is never overtaken (a shorter-prompt request
+        # behind it cannot jump ahead), which keeps the loop deterministic
+        # and starvation-free.
+        while pending and free_slots and pending[0].arrival <= now:
+            plen = len(pending[0].prompt)
+            group = []
+            for r in pending:
+                if (r.arrival <= now and len(r.prompt) == plen
+                        and len(group) < len(free_slots)
+                        and pool.available >= mb * (len(group) + 1)):
+                    group.append(r)
+                else:
+                    break
+            if not group:
+                break
+            for r in group:
+                pending.remove(r)
+            slots = [free_slots.pop(0) for _ in group]
+            rows = np.zeros((len(group), mb), np.int32)
+            for i, (r, s) in enumerate(zip(group, slots)):
+                r.slot, r.blocks = s, pool.alloc(mb)
+                rows[i] = r.blocks
+                ids_arr[s] = r.adapter_id
+            sl = jnp.asarray(slots, jnp.int32)
+            table = table.at[sl].set(jnp.asarray(rows))
+            prompts = jnp.asarray(np.stack([r.prompt for r in group]),
+                                  jnp.int32)
+            adapters = (bank.requests(jnp.asarray(
+                [r.adapter_id for r in group], jnp.int32))
+                if bank is not None else None)
+            _count_dispatch()
+            cache, first = admit(params, cache, prompts, jnp.asarray(rows),
+                                 sl, jnp.asarray(rows.reshape(-1)), adapters)
+            tok = tok.at[sl, 0].set(first)
+            pos = pos.at[sl].set(plen)
+            active = active.at[sl].set(True)
+            tnow = clock()
+            first_host = np.asarray(first)
+            for i, r in enumerate(group):
+                r.tokens = [int(first_host[i])]
+                r.t_first = None if tnow == float("inf") else tnow
+                running.append(r)
+            for r in [r for r in group if r.steps <= 1]:
+                finish(r, r.t_first)
+
+        # ---- decode chunk + eviction
+        if running:
+            adapters = (bank.requests(jnp.asarray(ids_arr))
+                        if bank is not None else None)
+            _count_dispatch()
+            cache, tok, pos, toks = chunk_run(params, cache, tok, pos,
+                                              active, table, adapters,
+                                              steps=chunk)
+            toks = np.asarray(toks)
+            tnow = clock()
+            for r in list(running):
+                take = min(chunk, r.steps - len(r.tokens))
+                r.tokens.extend(int(t) for t in toks[r.slot, :take])
+                if len(r.tokens) >= r.steps:
+                    finish(r, None if tnow == float("inf") else tnow)
+        elif pending:
+            gap = pending[0].arrival - clock()
+            if gap > 0:
+                time.sleep(min(gap, 0.02))
+    return sorted(reqs, key=lambda r: r.rid)
+
+
+def make_requests(trace, *, prompt_len, steps, tenants, vocab, seed=0):
+    """Request list from an arrival trace.
+
+    ``trace`` is either ``poisson:RATE:N`` (N arrivals, RATE req/s, seeded
+    exponential inter-arrival gaps — the serve_bench scenario) or a path to
+    a JSON list of ``{"arrival": s, "steps": n, "adapter": k}`` records.
+    Prompts are seeded random ids, round-robin adapters unless the trace
+    names them."""
+    rng = np.random.default_rng(seed)
+    if trace.startswith("poisson:"):
+        _, rate, n = trace.split(":")
+        gaps = rng.exponential(1.0 / float(rate), int(n))
+        recs = [{"arrival": float(t)} for t in np.cumsum(gaps)]
+    else:
+        with open(trace) as f:
+            recs = json.load(f)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, prompt_len).astype(
+                        np.int32),
+                    steps=int(rec.get("steps", steps)),
+                    adapter_id=int(rec.get("adapter", i % max(tenants, 1))),
+                    arrival=float(rec.get("arrival", 0.0)))
+            for i, rec in enumerate(recs)]
+
+
 # ------------------------------------------------------------------ CLI
 
 def build_bank(args, cfg, model):
@@ -298,6 +596,19 @@ def main(argv=None):
                     help="classic single-tenant path: merge this client's "
                          "adapters into the base weights (zero serving "
                          "overhead) instead of banked decode")
+    ap.add_argument("--arrival-trace", default=None,
+                    help="serve a request STREAM through the continuous-"
+                         "batching scheduler instead of one fixed batch: "
+                         "'poisson:RATE:N' (seeded Poisson arrivals) or a "
+                         "JSON trace file of {arrival, steps, adapter} "
+                         "records")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="scheduler engine slots (concurrent requests)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV tokens per pool block (paged cache)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per scheduler chunk (admission / "
+                         "eviction happen at chunk boundaries)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -308,6 +619,27 @@ def main(argv=None):
     prompt = jax.random.randint(jax.random.key(2), (args.batch, 4), 0,
                                 cfg.vocab_size)
     max_len = 4 + args.steps
+
+    if args.arrival_trace:
+        reqs = make_requests(args.arrival_trace, prompt_len=4,
+                             steps=args.steps, tenants=bank.size,
+                             vocab=cfg.vocab_size)
+        t0 = time.time()
+        done = serve_scheduled(model, base, reqs, bank=bank,
+                               max_batch=args.max_batch,
+                               block_size=args.block_size, chunk=args.chunk)
+        dt = time.time() - t0
+        lats = sorted(r.t_done - r.arrival for r in done
+                      if r.t_done is not None)
+        p50 = lats[len(lats) // 2] if lats else 0.0
+        p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))] if lats else 0.0
+        toks = sum(len(r.tokens) for r in done)
+        print(f"# {args.arch} scheduled serve: {len(done)} requests, "
+              f"{bank.size} tenants, max_batch={args.max_batch} "
+              f"block={args.block_size} chunk={args.chunk}  "
+              f"p50={p50*1000:.0f}ms p99={p99*1000:.0f}ms "
+              f"goodput={toks/dt:.1f} tok/s")
+        return done
 
     if args.merge is not None:
         merged = bank.adapter(args.merge).merge(base)

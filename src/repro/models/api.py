@@ -11,8 +11,8 @@ from repro.kernels import dispatch
 from repro.models.layers import norm_params, apply_norm
 from repro.models.transformer import (apply_stack, banked_scan_layout,
                                       batched_scan_layout, decode_stack,
-                                      init_stack, init_stack_cache,
-                                      prefill_stack)
+                                      init_stack, init_paged_stack_cache,
+                                      init_stack_cache, prefill_stack)
 
 PATCH_EMBED_DIM = 1152   # SigLIP stub output width (arXiv:2407.07726)
 
@@ -87,12 +87,12 @@ class Model:
                     batched_scan_layout(tree))
         return tree
 
-    def forward(self, params, batch, adapters=None, *, lora=None, gamma=None):
+    def forward(self, params, batch, adapters=None):
         """Full-sequence forward.  Returns (logits, aux_loss).
 
         ``adapters`` is an :class:`repro.core.lora.AdapterSet` (or None for
-        the base model).  ``lora=``/``gamma=`` are deprecated shims."""
-        adapters = as_adapter_set(adapters, lora=lora, gamma=gamma)
+        the base model)."""
+        adapters = as_adapter_set(adapters)
         cfg = self.cfg
         with dispatch.scope(cfg.use_pallas):
             x = self._embed(params, batch)
@@ -110,13 +110,12 @@ class Model:
             logits = x @ head.astype(x.dtype)
         return logits, aux
 
-    def loss(self, params, batch, adapters=None, *, lora=None, gamma=None):
+    def loss(self, params, batch, adapters=None):
         """Next-token CE over the text segment (+ MoE aux).  Encoder-only
         models use MLM-style loss (mask every 5th token).
 
-        ``adapters`` is an AdapterSet; ``lora=``/``gamma=`` are deprecated
-        shims."""
-        adapters = as_adapter_set(adapters, lora=lora, gamma=gamma)
+        ``adapters`` is an AdapterSet (or None for the base model)."""
+        adapters = as_adapter_set(adapters)
         cfg = self.cfg
         tokens = batch["tokens"]
         if cfg.family == "encoder":
@@ -196,8 +195,21 @@ class Model:
         cross = cfg.encoder_frames if cfg.family == "audio" else 0
         return init_stack_cache(cfg, batch, max_len, dtype, cross_len=cross)
 
+    def init_paged_cache(self, num_blocks: int, block_size: int, batch: int,
+                         dtype=None):
+        """Paged serving cache: per-layer KV pools of ``num_blocks`` x
+        ``block_size`` slots shared by every request through per-request
+        block tables, plus per-slot recurrent/cross state for ``batch``
+        engine slots.  Block 0 is reserved as the null block idle slots
+        write into (see launch/serve.py's allocator)."""
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        cross = cfg.encoder_frames if cfg.family == "audio" else 0
+        return init_paged_stack_cache(cfg, num_blocks, block_size, batch,
+                                      dtype, cross_len=cross)
+
     def prefill(self, params, cache, tokens, adapters=None, *, enc_out=None,
-                last_only=False):
+                last_only=False, table=None):
         """Whole-prompt forward that fills a FRESH cache in one batched
         pass: tokens (b, p) int32 -> (logits (b, p, V), new_cache).
         ``last_only=True`` projects only the final position through the
@@ -212,7 +224,8 @@ class Model:
         decode_step — None, an AdapterSet, or a banked per-request set from
         ``AdapterBank.gather``/``requests``.  Encoder-decoder (audio)
         models pass the encoder output as ``enc_out`` so the per-layer
-        cross K/V land in the cache."""
+        cross K/V land in the cache.  A paged cache (``init_paged_cache``)
+        additionally needs the requests' block ``table``."""
         adapters = as_adapter_set(adapters)
         cfg = self.cfg
         with dispatch.scope(cfg.use_pallas):
@@ -222,7 +235,8 @@ class Model:
             positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
             x, _, new_cache = prefill_stack(
                 cfg, params["stack"], cache, x, positions,
-                adapters=self._stack_adapters(adapters), enc_out=enc_out)
+                adapters=self._stack_adapters(adapters), enc_out=enc_out,
+                table=table)
             x = apply_norm(cfg, x, params, "final")
             if last_only:
                 x = x[:, -1:]
@@ -232,21 +246,23 @@ class Model:
         return logits, new_cache
 
     def decode_step(self, params, cache, token, pos, adapters=None, *,
-                    lora=None, gamma=None):
+                    table=None):
         """One token: token (b,1) int32, pos (b,) absolute position.
         Returns (logits (b,1,V), new_cache).
 
         ``adapters`` may be a single AdapterSet or a ``batched`` one from
         ``AdapterBank.gather`` (one adapter per batch row — multi-tenant
-        serving); ``lora=``/``gamma=`` are deprecated shims."""
-        adapters = as_adapter_set(adapters, lora=lora, gamma=gamma)
+        serving).  A paged cache additionally needs the requests' block
+        ``table`` (b, blocks_per_req) int32."""
+        adapters = as_adapter_set(adapters)
         cfg = self.cfg
         with dispatch.scope(cfg.use_pallas):
             x = jnp.take(params["embed"], token,
                          axis=0).astype(jnp.dtype(cfg.dtype))
             x, new_cache = decode_stack(cfg, params["stack"], cache, x, pos,
                                         adapters=self._stack_adapters(
-                                            adapters))
+                                            adapters),
+                                        table=table)
             x = apply_norm(cfg, x, params, "final")
             head = (params["embed"].T if cfg.tie_embeddings
                     else params["lm_head"])

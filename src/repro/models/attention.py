@@ -270,3 +270,126 @@ def attention_decode(cfg, params, x, cache, pos, *, adapters=None):
     lo = (adapters or {}).get("o")
     y = linear(out.reshape(b, 1, -1), params["o"], lo)
     return y, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+# ----------------------------------------------------------------- paged KV cache
+#
+# The paged layout replaces the per-request ring buffer (batch, size, kh, hd)
+# with a SHARED block pool (num_blocks, block_size, kh, hd) plus a per-request
+# block table (b, blocks_per_req) int32 mapping virtual block j of request i
+# to a pool block.  A request's view of the pool is a virtual ring of
+# vlen = blocks_per_req * block_size slots: token at absolute position p
+# lands in virtual slot p % vlen, i.e. pool block table[i, (p % vlen) //
+# block_size] at offset (p % vlen) % block_size.  Because that is the exact
+# ring formula with vlen in place of size, gathering a request's blocks back
+# into (b, vlen, kh, hd) reproduces the ring-buffer layout element for
+# element — when block_size divides the ring size the paged decode is
+# bit-identical to the ring decode (tests/test_paged.py).
+#
+# Block 0 is the NULL block: the scheduler points idle batch slots' table
+# rows at it, so their (discarded) decode writes land harmlessly in a block
+# no live request ever owns.  The pos pool doubles as the validity mask
+# (entry >= 0 == written), exactly like the ring cache's pos array.
+
+
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int, dtype):
+    """Per-layer shared pool.  The per-request geometry (how many blocks a
+    request owns) is the block TABLE's width, not a pool property."""
+    return {
+        "k_pool": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+        "v_pool": jnp.zeros((num_blocks, block_size, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+        "pos_pool": jnp.full((num_blocks, block_size), -1, jnp.int32),
+    }
+
+
+def paged_gather(cache, table):
+    """Materialize each request's virtual ring view of the pool:
+    (k (b, vlen, kh, hd), v (b, vlen, kh, hd), pos (b, vlen))."""
+    b, mb = table.shape
+    bs = cache["k_pool"].shape[1]
+    kh, hd = cache["k_pool"].shape[2:]
+    k = cache["k_pool"][table].reshape(b, mb * bs, kh, hd)
+    v = cache["v_pool"][table].reshape(b, mb * bs, kh, hd)
+    pos = cache["pos_pool"][table].reshape(b, mb * bs)
+    return k, v, pos
+
+
+def fill_paged_kv_cache(cache, k, v, positions, table):
+    """Paged counterpart of :func:`fill_kv_cache`: write a whole prompt's
+    K/V rows into each request's pool blocks at the virtual-ring slots the
+    token-by-token decode would have used.  On overflow only the last
+    ``vlen`` positions land — the survivors of sequential ring writes."""
+    bs = cache["k_pool"].shape[1]
+    vlen = table.shape[1] * bs
+    if k.shape[1] > vlen:
+        k, v, positions = k[:, -vlen:], v[:, -vlen:], positions[:, -vlen:]
+    vslot = positions % vlen                                # (b, s)
+    blk = jnp.take_along_axis(table, vslot // bs, axis=1)   # (b, s)
+    off = vslot % bs
+    return {"k_pool": cache["k_pool"].at[blk, off].set(k),
+            "v_pool": cache["v_pool"].at[blk, off].set(v),
+            "pos_pool": cache["pos_pool"].at[blk, off].set(positions)}
+
+
+def attention_prefill_paged(cfg, params, x, cache, positions, table, *,
+                            adapters=None):
+    """Whole-prompt attention that fills the request's POOL blocks.  The
+    attention itself is over the prompt's own K/V (same math as
+    :func:`attention_prefill`); only the cache writes differ."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x, adapters=adapters,
+                           positions=positions, kv_positions=positions)
+    new_cache = fill_paged_kv_cache(cache, k, v, positions, table)
+    win = cfg.attn_window
+    q, k, v = _maybe_expand_kv(cfg, q, k, v)
+    if s > BLOCKWISE_THRESHOLD:
+        out = blockwise_attention(cfg, q, k, v, positions, positions,
+                                  causal=True, window=win)
+    else:
+        mask = make_mask(positions, positions, causal=True, window=win)
+        out = attention_core(cfg, q, k, v, mask)
+    y = linear(out.reshape(b, s, -1), params["o"],
+               (adapters or {}).get("o"))
+    return y, new_cache
+
+
+def attention_decode_paged(cfg, params, x, cache, table, pos, *,
+                           adapters=None):
+    """One-token decode against the block pool.  x (b,1,d); table (b,
+    blocks_per_req) int32; pos (b,) absolute position.
+
+    Reference tier gathers the request's blocks back into the ring layout
+    and reuses the exact ring mask/attention ops (bit-identity); on the
+    pallas tier the gather never materializes — the kernel's BlockSpecs
+    stream pool blocks through the block table via scalar prefetch."""
+    from repro.kernels import dispatch
+
+    b = x.shape[0]
+    bs = cache["k_pool"].shape[1]
+    vlen = table.shape[1] * bs
+    q, k, v = _project_qkv(cfg, params, x, adapters=adapters,
+                           positions=pos[:, None], kv_positions=pos[:, None])
+    vslot = pos % vlen                                  # (b,)
+    bidx = jnp.arange(b)
+    blk = table[bidx, vslot // bs]
+    off = vslot % bs
+    new_cache = {"k_pool": cache["k_pool"].at[blk, off].set(k[:, 0]),
+                 "v_pool": cache["v_pool"].at[blk, off].set(v[:, 0]),
+                 "pos_pool": cache["pos_pool"].at[blk, off].set(pos)}
+    if dispatch.resolve_mode() == "pallas":
+        from repro.kernels.paged_attention import paged_attention
+        dispatch.stats["paged"] += 1
+        out = paged_attention(
+            q[:, 0], new_cache["k_pool"], new_cache["v_pool"],
+            new_cache["pos_pool"], table, pos,
+            window=cfg.attn_window, softcap=cfg.attn_logit_softcap)[:, None]
+    else:
+        kg, vg, pg = paged_gather(new_cache, table)
+        mask = make_mask(pos[:, None], pg, causal=True,
+                         window=cfg.attn_window, valid_kv=pg >= 0)
+        out = attention_core(cfg, q, kg, vg, mask)
+    lo = (adapters or {}).get("o")
+    y = linear(out.reshape(b, 1, -1), params["o"], lo)
+    return y, new_cache

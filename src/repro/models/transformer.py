@@ -25,8 +25,10 @@ from repro.models import attention as attn_mod
 from repro.models import rglru as rglru_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import (attn_params, attention_fullseq,
-                                    attention_decode, attention_prefill,
-                                    init_kv_cache, _project_qkv,
+                                    attention_decode, attention_decode_paged,
+                                    attention_prefill,
+                                    attention_prefill_paged, init_kv_cache,
+                                    init_paged_kv_cache, _project_qkv,
                                     attention_core, make_mask)
 from repro.models.layers import (apply_norm, linear, mlp_apply, mlp_params,
                                  norm_params)
@@ -85,6 +87,25 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int, dtype,
     raise ValueError(kind)
 
 
+def init_paged_block_cache(cfg, kind: str, num_blocks: int, block_size: int,
+                           batch: int, dtype, cross_len: int = 0):
+    """Paged-serving counterpart of :func:`init_block_cache`: attention KV
+    moves into a shared block pool (no batch dim — requests own pool blocks
+    through the block table), while recurrent blocks and cross-attention K/V
+    carry constant-size PER-SLOT state (``batch`` = engine slot count) —
+    admit/evict for those is a slot-level state swap, not paging."""
+    if kind == "attn":
+        return init_paged_kv_cache(cfg, num_blocks, block_size, dtype)
+    if kind == "xattn":
+        return {"self": init_paged_kv_cache(cfg, num_blocks, block_size,
+                                            dtype),
+                "cross_k": jnp.zeros((batch, cross_len, cfg.num_kv_heads,
+                                      cfg.head_dim), dtype),
+                "cross_v": jnp.zeros((batch, cross_len, cfg.num_kv_heads,
+                                      cfg.head_dim), dtype)}
+    return init_block_cache(cfg, kind, batch, 0, dtype, cross_len=cross_len)
+
+
 # ----------------------------------------------------------------- block apply
 
 def _cross_attention(cfg, params, x, ck, cv, adapters=None):
@@ -109,11 +130,16 @@ def build_cross_kv(cfg, p_cross, enc_out):
 
 def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
                 causal=True, mode="fullseq", cache=None, pos=None,
-                enc_out=None):
+                enc_out=None, table=None):
     """``mode``: "fullseq" (train/encode — no cache), "prefill" (whole
     prompt in one pass, cache filled as the token-by-token decode would
     have), "decode" (one token against the cache).  Prefill and decode
-    return (x, aux, new_cache); fullseq returns (x, aux)."""
+    return (x, aux, new_cache); fullseq returns (x, aux).
+
+    A paged attention cache (``k_pool`` pool leaves instead of per-request
+    ``k`` rings — see models/attention.py) routes to the paged prefill /
+    decode paths; ``table`` (b, blocks_per_req) int32 is required then and
+    ignored otherwise.  Non-attention state is per-slot either way."""
     adapters = adapters or {}
     aux = jnp.zeros((), jnp.float32)
     h1 = apply_norm(cfg, x, p, "ln1")
@@ -122,18 +148,29 @@ def apply_block(cfg, kind, p, x, *, adapters=None, positions=None,
     if kind in ("attn", "xattn"):
         self_cache = (None if cache is None
                       else cache["self"] if kind == "xattn" else cache)
+        paged = self_cache is not None and "k_pool" in self_cache
         if mode == "fullseq":
             a = attention_fullseq(cfg, p["attn"], h1, causal=causal,
                                   adapters=adapters.get("attn"),
                                   positions=positions)
         elif mode == "prefill":
-            a, self_cache = attention_prefill(
-                cfg, p["attn"], h1, self_cache, positions,
-                adapters=adapters.get("attn"))
+            if paged:
+                a, self_cache = attention_prefill_paged(
+                    cfg, p["attn"], h1, self_cache, positions, table,
+                    adapters=adapters.get("attn"))
+            else:
+                a, self_cache = attention_prefill(
+                    cfg, p["attn"], h1, self_cache, positions,
+                    adapters=adapters.get("attn"))
         else:
-            a, self_cache = attention_decode(
-                cfg, p["attn"], h1, self_cache,
-                pos, adapters=adapters.get("attn"))
+            if paged:
+                a, self_cache = attention_decode_paged(
+                    cfg, p["attn"], h1, self_cache, table, pos,
+                    adapters=adapters.get("attn"))
+            else:
+                a, self_cache = attention_decode(
+                    cfg, p["attn"], h1, self_cache,
+                    pos, adapters=adapters.get("attn"))
         x = x + a
         if kind == "xattn":
             hx = apply_norm(cfg, x, p, "lnx")
@@ -245,6 +282,95 @@ def init_stack_cache(cfg, batch, max_len, dtype, *, num_layers=None,
     return out
 
 
+def init_paged_stack_cache(cfg, num_blocks, block_size, batch, dtype, *,
+                           num_layers=None, pattern=None, cross_len=0):
+    """Stack cache for the paged serving engine: attention layers hold
+    SHARED pools (repeat leaves gain a leading layer dim as usual), every
+    other layer kind holds per-slot state for ``batch`` engine slots."""
+    num_layers = num_layers or cfg.num_layers
+    pattern = pattern or cfg.block_pattern
+    repeats, tail = stack_layout(num_layers, pattern)
+    mk = lambda kind: init_paged_block_cache(cfg, kind, num_blocks,
+                                             block_size, batch, dtype,
+                                             cross_len=cross_len)
+    out = {"repeat": {}, "tail": {}}
+    if repeats:
+        for j, kind in enumerate(pattern):
+            out["repeat"][f"p{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (repeats,) + a.shape).copy(),
+                mk(kind))
+    for i, kind in enumerate(tail):
+        out["tail"][f"t{i}"] = mk(kind)
+    return out
+
+
+# The scheduler's cache surgery (launch/serve.py): a paged stack cache mixes
+# two leaf families — SHARED pool subtrees (dicts holding "k_pool", no batch
+# dim beyond the repeat-layer one) and PER-SLOT leaves (batch axis 0 in the
+# tail, axis 1 under the repeat stacking).  Admission prefills newcomers on a
+# view whose pools ARE the engine pools (their functional update only
+# touches the newcomers' blocks) and whose per-slot leaves are fresh inits
+# at the group size, then the merge takes pool subtrees wholesale and
+# scatters per-slot leaves into the newcomers' slots.
+
+
+def _walk_paged(c, v, fn_pool, fn_leaf, axis):
+    if isinstance(c, dict):
+        if "k_pool" in c:
+            return fn_pool(c, None if v is None else v, axis)
+        return {k: _walk_paged(c[k], None if v is None else v[k],
+                               fn_pool, fn_leaf, axis) for k in c}
+    return fn_leaf(c, v, axis)
+
+
+def _map_paged_cache(cache, view, fn_pool, fn_leaf):
+    return {"repeat": {k: _walk_paged(cache["repeat"][k],
+                                      None if view is None
+                                      else view["repeat"][k],
+                                      fn_pool, fn_leaf, 1)
+                       for k in cache["repeat"]},
+            "tail": {k: _walk_paged(cache["tail"][k],
+                                    None if view is None
+                                    else view["tail"][k],
+                                    fn_pool, fn_leaf, 0)
+                     for k in cache["tail"]}}
+
+
+def paged_prefill_view(cfg, cache, batch, dtype, *, num_layers=None,
+                       pattern=None, cross_len=0):
+    """Admission view: engine pools shared, fresh per-slot state for a
+    ``batch``-request newcomer group (zero recurrences, -1e30 stabilizer
+    states — exactly what a fresh fixed-batch cache would hold)."""
+    fresh = init_paged_stack_cache(cfg, 1, 1, batch, dtype,
+                                   num_layers=num_layers, pattern=pattern,
+                                   cross_len=cross_len)
+    return _map_paged_cache(cache, fresh,
+                            lambda c, v, axis: c,
+                            lambda c, v, axis: v)
+
+
+def merge_paged_cache(cache, view, slots):
+    """Fold an admission view back into the engine cache: pool subtrees
+    come back wholesale (only the newcomers' blocks changed), per-slot
+    leaves scatter into the newcomers' ``slots``."""
+    return _map_paged_cache(
+        cache, view,
+        lambda c, v, axis: v,
+        lambda c, v, axis: (c.at[slots].set(v) if axis == 0
+                            else c.at[:, slots].set(v)))
+
+
+def reset_paged_blocks(cache, blocks):
+    """Invalidate ``blocks`` (1-D int32) in every layer's pos pool before
+    reuse: freed blocks keep stale ``pos >= 0`` entries that the validity
+    mask would otherwise re-admit into a new owner's attention."""
+    def pool(c, v, axis):
+        pp = (c["pos_pool"].at[blocks].set(-1) if axis == 0
+              else c["pos_pool"].at[:, blocks].set(-1))
+        return {**c, "pos_pool": pp}
+    return _map_paged_cache(cache, None, pool, lambda c, v, axis: c)
+
+
 def apply_stack(cfg, stack_params, x, *, adapters=None, positions=None,
                 causal=True, pattern=None, remat=True, enc_out=None):
     """Full-sequence forward.  Returns (x, aux_sum).
@@ -304,12 +430,14 @@ def _tail_kinds(cfg, pattern, stack_params):
 
 
 def prefill_stack(cfg, stack_params, cache, x, positions, *, adapters=None,
-                  pattern=None, enc_out=None):
+                  pattern=None, enc_out=None, table=None):
     """Whole-prompt forward that also fills every block cache in ONE pass —
     the batched replacement for feeding the prompt through single-token
     decode steps.  Returns (x, aux_sum, new_cache); the cache comes back
     exactly as the token-by-token decode would have left it (KV ring-buffer
-    slots, recurrence states, conv tails)."""
+    slots or pool blocks, recurrence states, conv tails).  ``table`` routes
+    paged attention caches; it is the same for every layer (each layer has
+    its own pool of identical geometry), so it rides the scan closure."""
     pattern = pattern or cfg.block_pattern
     adapters = adapters or {}
     rep_p = stack_params.get("repeat", {})
@@ -323,7 +451,8 @@ def prefill_stack(cfg, stack_params, cache, x, positions, *, adapters=None,
             h, a, nc = apply_block(cfg, kind, ps[f"p{j}"], h,
                                    adapters=los.get(f"p{j}"),
                                    positions=positions, mode="prefill",
-                                   cache=cs[f"p{j}"], enc_out=enc_out)
+                                   cache=cs[f"p{j}"], enc_out=enc_out,
+                                   table=table)
             new_cs[f"p{j}"] = nc
             aux = aux + a
         return h, (new_cs, aux)
@@ -342,14 +471,15 @@ def prefill_stack(cfg, stack_params, cache, x, positions, *, adapters=None,
         x, a, nc = apply_block(cfg, kind, stack_params["tail"][key], x,
                                adapters=(adapters.get("tail") or {}).get(key),
                                positions=positions, mode="prefill",
-                               cache=cache["tail"][key], enc_out=enc_out)
+                               cache=cache["tail"][key], enc_out=enc_out,
+                               table=table)
         new_cache["tail"][key] = nc
         aux_total = aux_total + a
     return x, aux_total, new_cache
 
 
 def decode_stack(cfg, stack_params, cache, x, pos, *, adapters=None,
-                 pattern=None):
+                 pattern=None, table=None):
     """One-token decode through the stack.  Returns (x, new_cache)."""
     pattern = pattern or cfg.block_pattern
     adapters = adapters or {}
@@ -362,7 +492,8 @@ def decode_stack(cfg, stack_params, cache, x, pos, *, adapters=None,
         for j, kind in enumerate(pattern):
             h, _, nc = apply_block(cfg, kind, ps[f"p{j}"], h,
                                    adapters=los.get(f"p{j}"),
-                                   mode="decode", cache=cs[f"p{j}"], pos=pos)
+                                   mode="decode", cache=cs[f"p{j}"], pos=pos,
+                                   table=table)
             new_cs[f"p{j}"] = nc
         return h, new_cs
 
@@ -378,7 +509,7 @@ def decode_stack(cfg, stack_params, cache, x, pos, *, adapters=None,
         x, _, nc = apply_block(cfg, kind, stack_params["tail"][key], x,
                                adapters=(adapters.get("tail") or {}).get(key),
                                mode="decode",
-                               cache=cache["tail"][key], pos=pos)
+                               cache=cache["tail"][key], pos=pos, table=table)
         new_cache["tail"][key] = nc
     return x, new_cache
 

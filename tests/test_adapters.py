@@ -1,6 +1,6 @@
-"""First-class adapter API: AdapterSet/AdapterBank units, deprecation shims,
-LoRA-aware KV-cache decode, multi-tenant banked serving, and train-vs-serve
-checkpoint parity."""
+"""First-class adapter API: AdapterSet/AdapterBank units, LoRA-aware
+KV-cache decode, multi-tenant banked serving, and train-vs-serve checkpoint
+parity."""
 import dataclasses
 import os
 import warnings
@@ -131,76 +131,6 @@ def test_merge_equals_runtime(tiny):
     merged, _ = model.forward(aset.merge(params), {"tokens": toks})
     np.testing.assert_allclose(np.asarray(runtime), np.asarray(merged),
                                rtol=1e-4, atol=1e-4)
-
-
-# ------------------------------------------------------- deprecation shims
-
-@pytest.mark.deprecation_shim
-def test_forward_loss_decode_legacy_kwargs_warn_and_match(tiny):
-    """lora=/gamma= shims emit DeprecationWarning and are bit-identical to
-    the adapters= path."""
-    _, model, params = tiny
-    aset = _nonzero(init_adapter_set(params, jax.random.key(1),
-                                     LoRAConfig(rank=4)))
-    toks = jax.random.randint(jax.random.key(7), (2, 8), 0, 64)
-    gamma = 1.7
-    new_aset = dataclasses.replace(aset, gamma=gamma)
-
-    ref_fwd, _ = model.forward(params, {"tokens": toks}, adapters=new_aset)
-    with pytest.warns(DeprecationWarning):
-        old_fwd, _ = model.forward(params, {"tokens": toks}, lora=aset.lora,
-                                   gamma=gamma)
-    np.testing.assert_array_equal(np.asarray(ref_fwd), np.asarray(old_fwd))
-
-    ref_loss, _ = model.loss(params, {"tokens": toks}, adapters=new_aset)
-    with pytest.warns(DeprecationWarning):
-        old_loss, _ = model.loss(params, {"tokens": toks}, lora=aset.lora,
-                                 gamma=gamma)
-    assert float(ref_loss) == float(old_loss)
-
-    cache = model.init_cache(2, 8)
-    tok = jnp.ones((2, 1), jnp.int32)
-    pos = jnp.zeros((2,), jnp.int32)
-    ref_dec, _ = model.decode_step(params, cache, tok, pos, adapters=new_aset)
-    with pytest.warns(DeprecationWarning):
-        old_dec, _ = model.decode_step(params, cache, tok, pos,
-                                       lora=aset.lora, gamma=gamma)
-    np.testing.assert_array_equal(np.asarray(ref_dec), np.asarray(old_dec))
-
-
-@pytest.mark.deprecation_shim
-def test_engine_legacy_gamma_kwarg_warns_and_matches(tiny):
-    """make_fed_round_step/make_run_chunk gamma= shims warn and reproduce
-    the AdapterSet engine bit-for-bit."""
-    _, model, params = tiny
-    opt_cfg = OptimizerConfig(name="sgd", lr=0.05)
-    n = 2
-    lora1 = init_lora(params, jax.random.key(1), LoRAConfig(rank=4))
-    lora_n = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), lora1)
-    opt_n = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(),
-        make_optimizer(opt_cfg)[0](lora1))
-    batch = {"tokens": jax.random.randint(jax.random.key(2), (n, 1, 2, 8),
-                                          0, 64)}
-    gamma = 2.0
-
-    new_step = make_fed_round_step(model, strategy="fedsa", opt_cfg=opt_cfg,
-                                   donate=False)
-    new_out, _, new_m = new_step(params, AdapterSet(lora=lora_n, gamma=gamma),
-                                 opt_n, batch, jnp.asarray(0))
-    with pytest.warns(DeprecationWarning):
-        old_step = make_fed_round_step(model, strategy="fedsa",
-                                       opt_cfg=opt_cfg, gamma=gamma,
-                                       donate=False)
-    old_out, _, old_m = old_step(params, lora_n, opt_n, batch, jnp.asarray(0))
-    assert float(new_m["loss"]) == float(old_m["loss"])
-    for a, b in zip(jax.tree.leaves(new_out.lora), jax.tree.leaves(old_out)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-    with pytest.warns(DeprecationWarning):
-        make_run_chunk(model, strategy="fedsa", opt_cfg=opt_cfg, gamma=gamma,
-                       donate=False)
 
 
 # ------------------------------------------------- LoRA-aware decode parity
