@@ -122,12 +122,78 @@ def load_records(dirname=DRYRUN_DIR):
     return recs
 
 
+def quant_decode_table(emit=print):
+    """Decode arithmetic-intensity accounting under quantized base weights.
+
+    Bytes-moved uses the ACTUAL storage dtypes: fp leaves at their itemsize,
+    packed leaves at their int8/int4-packed + scales bytes (the
+    ``QuantizedLinear.nbytes`` accounting, on eval_shape trees — no real
+    buffers).  Decode at small batch is bandwidth-bound: every step streams
+    the whole parameter set once, so predicted per-token intensity is
+    2*P*B FLOPs over the tree's stored bytes, and the predicted decode
+    speedup from quantization is simply the byte ratio.  When
+    BENCH_serve.json carries a ``quant`` section the MEASURED decode ratio
+    prints beside the prediction (CPU container: XLA re-dequantizes on the
+    reference tier, so measured ~1.0x is expected there; the predicted
+    column is the TPU story the packed DMA path exists for)."""
+    import jax
+    import numpy as np
+
+    from benchmarks.common import bench_config
+    from repro.core.quant import quant_footprint, quantize_tree
+    from repro.models.api import build_model
+
+    cfg = bench_config()
+    model = build_model(cfg)
+    batch = 8
+    trees = {"fp": jax.eval_shape(lambda: model.init(jax.random.key(0)))}
+    for mode in ("int8", "int4"):
+        trees[mode] = jax.eval_shape(
+            lambda m=mode: quantize_tree(model.init(jax.random.key(0)), m))
+    foot = {m: quant_footprint(t) for m, t in trees.items()}
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(trees["fp"]))
+    flops = 2 * n_params * batch
+
+    measured = {}
+    bench = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    try:
+        with open(bench) as f:
+            measured = {k: v.get("decode_vs_fp")
+                        for k, v in json.load(f).get("quant", {}).items()}
+    except (OSError, ValueError):
+        pass
+
+    emit("roofline,quant,mode,base_mbytes,total_mbytes,intensity_flops_per_"
+         "byte,pred_decode_speedup,measured_decode_vs_fp")
+    fp_bytes = foot["fp"]["total_bytes"]
+    rows = []
+    for mode in ("fp", "int8", "int4"):
+        fo = foot[mode]
+        row = {"mode": mode,
+               "base_mbytes": fo["base_bytes"] / 1e6,
+               "total_mbytes": fo["total_bytes"] / 1e6,
+               "intensity": flops / fo["total_bytes"],
+               "pred_decode_speedup": fp_bytes / fo["total_bytes"],
+               "measured_decode_vs_fp": measured.get(mode)}
+        rows.append(row)
+        meas = (f"{row['measured_decode_vs_fp']:.2f}"
+                if row["measured_decode_vs_fp"] else "-")
+        emit(f"roofline,quant,{mode},{row['base_mbytes']:.2f},"
+             f"{row['total_mbytes']:.2f},{row['intensity']:.1f},"
+             f"{row['pred_decode_speedup']:.2f},{meas}")
+    return rows
+
+
 def main(emit=print):
     recs = load_records()
     if not recs:
         emit("roofline,no_dryrun_records_found,run launch/dryrun.py first")
+        quant_decode_table(emit)
         return []
-    return table(recs, emit)
+    rows = table(recs, emit)
+    quant_decode_table(emit)
+    return rows
 
 
 if __name__ == "__main__":

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quant import QuantizedLinear
+
 _SEP = "::"
+_QUANT = "__quant__"
 
 
 def _flatten(tree, prefix=""):
@@ -18,6 +21,15 @@ def _flatten(tree, prefix=""):
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    elif isinstance(tree, QuantizedLinear):
+        # packed base leaf (core/quant.py): a sentinel subtree holding the
+        # packed data + scales plus the static aux, restored in _unlistify
+        enc = {"data": tree.data, "scales": tree.scales,
+               "bits": np.asarray(tree.bits),
+               "group_size": np.asarray(tree.group_size),
+               "k": np.asarray(tree.k),
+               "out_dtype": np.asarray(tree.out_dtype)}
+        out.update(_flatten(enc, f"{prefix}{_QUANT}{_SEP}"))
     else:
         out[prefix.rstrip(_SEP)] = np.asarray(tree)
     return out
@@ -44,6 +56,12 @@ def load_pytree(path: str):
 
 def _unlistify(node):
     if isinstance(node, dict):
+        if set(node) == {_QUANT}:
+            q = node[_QUANT]
+            return QuantizedLinear(
+                jnp.asarray(q["data"]), jnp.asarray(q["scales"]),
+                int(q["bits"]), int(q["group_size"]), int(q["k"]),
+                str(np.asarray(q["out_dtype"])))
         if node and all(k.startswith("#") for k in node):
             return [_unlistify(node[f"#{i}"]) for i in range(len(node))]
         return {k: _unlistify(v) for k, v in node.items()}

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import get_strategy
+from repro.core.quant import dequantize_tree, has_quantized
 from repro.core.lora import (AdapterSet, apply_rank_mask, init_lora,
                              mask_rank_tree, rank_mask)
 from repro.core.scaling import per_client_gammas, scaling_factor
@@ -193,6 +194,15 @@ def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
 
     def run_chunk(base, adapters, opt_N, key, round0, batches=None,
                   num_rounds=None):
+        # packed frozen base on the reference tier: dequantize UP FRONT,
+        # once per compiled chunk — scan-invariant, so XLA materializes the
+        # fp view once instead of per round-step.  Fused tiers keep the base
+        # packed (per-tile VMEM dequant inside the kernels).
+        if has_quantized(base):
+            from repro.kernels import dispatch
+            with dispatch.scope(model.cfg.use_pallas):
+                if dispatch.resolve_mode() == "reference":
+                    base = dequantize_tree(base)
         num_clients = jax.tree.leaves(adapters.lora)[0].shape[0]
         num_sampled = max(1, int(round(participation * num_clients)))
 

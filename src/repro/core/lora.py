@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as onp
 
+from repro.core.quant import QuantizedLinear, dequantize
+
 # which leaves inside each block subtree are adaptable, per target name
 _TARGET_SUBTREES = ("attn", "cross", "mlstm", "rglru")
 _TARGET_LEAVES = {
@@ -97,6 +99,12 @@ def merge_lora(params, lora, gamma):
         if set(l_node) == {"a", "b"}:
             a, b = l_node["a"], l_node["b"]
             delta = jnp.einsum("...or,...ri->...io", b, a) * gamma
+            if isinstance(p_node, QuantizedLinear):
+                # merged weights leave packed form: the sum W0 + gamma B A is
+                # not representable on W0's quantization grid.  Callers that
+                # want a packed merged base re-quantize the result.
+                w = dequantize(p_node)
+                return w + delta.astype(w.dtype)
             return (p_node + delta.astype(p_node.dtype))
         if isinstance(p_node, dict):
             return {k: merge_node(v, l_node.get(k, None))

@@ -1,0 +1,291 @@
+"""Quantized storage for the frozen base weights.
+
+The paper's design keeps the base frozen — only the tiny LoRA factors train
+and travel — so the base weight bytes are pure dead freight in HBM: they are
+read once per projection and never written.  This module stores them packed:
+
+  int8   per-output-channel symmetric absmax.  data int8 (..., k, n),
+         scales fp32 (..., 1, n) — scale_j = max_i |w_ij| / 127.
+  int4   grouped absmax along the contraction dim (NF4-style group scaling
+         without the nonlinear codebook: the paper's bases are
+         normal-ranged, absmax groups stay within the fp round-trip bounds
+         pinned in tests).  k is padded up to a multiple of ``group_size``,
+         two 4-bit values pack per byte along k: data uint8 (..., k/2, n),
+         scales fp32 (..., k/G, n) — scale_gj = max_{i in g} |w_ij| / 7.
+
+Only GEMM weights that route through ``kernels/dispatch`` quantize (attention
+q/k/v/o, cross-attention, MLP up/gate/down, RG-LRU wx/wy).  Embedding, head,
+norms, gates, routers and every LoRA / optimizer / federated leaf stay fp —
+the quantized tree is a drop-in ``params`` pytree where some leaves are
+:class:`QuantizedLinear` nodes instead of arrays.
+
+Tier policy (mirrored in ``kernels/dispatch``): the reference tier
+dequantizes to fp up front — bit-exact against :func:`dequantize`, so parity
+bounds are pinned once here — while the fused Pallas tiers DMA the packed
+tiles and dequantize in VMEM (``kernels/lora_matmul.dequant_block``), never
+materializing fp base weights in HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MODES = ("none", "int8", "int4")
+
+# group size must be a power of two <= 128 so it always divides the kernel
+# k-blocks (multiples of the 128 lane tile — see kernels/tiling.py)
+GROUP_SIZES = (2, 4, 8, 16, 32, 64, 128)
+DEFAULT_GROUP = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinear:
+    """A packed frozen GEMM weight: pytree children (data, scales), static
+    aux (bits, group_size, logical k, dequantized dtype).
+
+    Behaves shape/dtype-wise like the fp array it replaced (``.shape`` /
+    ``.dtype`` / ``.ndim`` report the LOGICAL view), so shape-walking code
+    (LoRA init, roofline param counting) works unchanged.  Leading stacked
+    dims (the repeat-layer scan layout) ride along: ``lax.scan`` slices the
+    data/scales children per layer like any other stacked leaf.
+    """
+    data: Any       # int8 (..., k, n) | uint8 (..., kq/2, n) packed pairs
+    scales: Any     # fp32 (..., 1, n) | fp32 (..., kq/G, n)
+    bits: int = 8
+    group_size: int = 0   # 0 = per-channel (one k-sized group)
+    k: int = 0            # logical contraction dim (pre-padding)
+    out_dtype: str = "float32"
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.data.shape[:-2] + (self.k, self.data.shape[-1])
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.out_dtype)
+
+    @property
+    def nbytes(self) -> int:
+        """Packed bytes (data + scales) — works on ShapeDtypeStruct leaves
+        too, so roofline accounting never needs real buffers."""
+        return (int(np.prod(self.data.shape)) * np.dtype(
+                    jnp.int8 if self.bits == 8 else jnp.uint8).itemsize
+                + int(np.prod(self.scales.shape)) * 4)
+
+    def dequantize(self):
+        return dequantize(self)
+
+    def tree_flatten(self):
+        return ((self.data, self.scales),
+                (self.bits, self.group_size, self.k, self.out_dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scales = children
+        return cls(data, scales, *aux)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedLinear,
+    lambda q: q.tree_flatten(),
+    QuantizedLinear.tree_unflatten)
+
+
+# --------------------------------------------------------------- quant / deq
+
+def quantize(w, bits: int = 8, group_size: int = DEFAULT_GROUP
+             ) -> QuantizedLinear:
+    """One-shot post-load quantization of a (..., k, n) GEMM weight."""
+    w = jnp.asarray(w)
+    if w.ndim < 2:
+        raise ValueError(f"quantize expects a >=2-D GEMM weight, got {w.shape}")
+    out_dtype = str(w.dtype)
+    k = w.shape[-2]
+    wf = w.astype(jnp.float32)
+    if bits == 8:
+        amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)     # (..., 1, n)
+        scales = jnp.maximum(amax, 1e-12) / 127.0
+        data = jnp.clip(jnp.round(wf / scales), -127, 127).astype(jnp.int8)
+        return QuantizedLinear(data, scales, 8, 0, k, out_dtype)
+    if bits != 4:
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
+    if group_size not in GROUP_SIZES:
+        raise ValueError(
+            f"group_size must be a power of two <= 128 (got {group_size}) "
+            "so scale tiles align with the kernel k-blocks")
+    kq = -(-k // group_size) * group_size
+    if kq != k:       # pad k to a group multiple; zero rows dequantize to 0
+        pad = [(0, 0)] * (wf.ndim - 2) + [(0, kq - k), (0, 0)]
+        wf = jnp.pad(wf, pad)
+    lead = wf.shape[:-2]
+    n = wf.shape[-1]
+    wg = wf.reshape(*lead, kq // group_size, group_size, n)
+    amax = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)   # (..., ng, 1, n)
+    scales = jnp.maximum(amax, 1e-12) / 7.0
+    q = jnp.clip(jnp.round(wg / scales), -7, 7).astype(jnp.int32)
+    q = q.reshape(*lead, kq, n)
+    # pack row pairs: even row -> low nibble, odd row -> high nibble
+    qu = q & 0xF
+    data = (qu[..., 0::2, :] | (qu[..., 1::2, :] << 4)).astype(jnp.uint8)
+    return QuantizedLinear(data, scales[..., 0, :], 4, group_size, k,
+                           out_dtype)
+
+
+def unpack_int4(data):
+    """uint8 (..., kq/2, n) packed pairs -> int32 (..., kq, n) in [-8, 7]."""
+    wi = data.astype(jnp.int32)
+    lo = wi & 0xF
+    hi = (wi >> 4) & 0xF
+    lo = lo - 2 * (lo & 0x8)    # sign-extend the 4-bit two's complement
+    hi = hi - 2 * (hi & 0x8)
+    vals = jnp.stack([lo, hi], axis=-2)            # (..., kq/2, 2, n)
+    return vals.reshape(*data.shape[:-2], data.shape[-2] * 2, data.shape[-1])
+
+
+def dequantize(q: QuantizedLinear):
+    """Packed -> fp (..., k, n) in the original dtype; the reference-tier
+    and parity-bound ground truth."""
+    if q.bits == 8:
+        w = q.data.astype(jnp.float32) * q.scales.astype(jnp.float32)
+    else:
+        vals = unpack_int4(q.data).astype(jnp.float32)
+        lead = vals.shape[:-2]
+        kq, n = vals.shape[-2:]
+        ng = kq // q.group_size
+        w = (vals.reshape(*lead, ng, q.group_size, n)
+             * q.scales.astype(jnp.float32)[..., :, None, :])
+        w = w.reshape(*lead, kq, n)
+        if kq != q.k:
+            w = w[..., :q.k, :]
+    return w.astype(jnp.dtype(q.out_dtype))
+
+
+# ----------------------------------------------------------------- tree ops
+
+# (parent key, leaf key) pairs eligible for quantization: exactly the frozen
+# GEMM weights that route through kernels/dispatch.lora_linear.  Everything
+# else (embed/head, norms, recurrent gates, MoE routers, xLSTM projections)
+# stays fp.
+ELIGIBLE = {
+    "attn": ("q", "k", "v", "o"),
+    "cross": ("q", "k", "v", "o"),
+    "mlp": ("w_up", "w_gate", "w_down"),
+    "rglru": ("wx", "wy"),
+}
+
+
+def _walk(node, fn, path=()):
+    if isinstance(node, dict):
+        return {key: _walk(v, fn, path + (key,)) for key, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(_walk(v, fn, path + (str(i),))
+                          for i, v in enumerate(node))
+    return fn(path, node)
+
+
+def quantize_tree(params, mode: str, group_size: int = DEFAULT_GROUP):
+    """Replace every eligible frozen GEMM leaf with a QuantizedLinear node.
+
+    ``mode`` is "int8" / "int4" ("none" returns the tree unchanged).  Leading
+    stacked dims (scan layout) quantize along the last two dims per layer.
+    """
+    if mode in (None, "none"):
+        return params
+    if mode not in ("int8", "int4"):
+        raise ValueError(f"quant mode must be one of {MODES}, got '{mode}'")
+    bits = 8 if mode == "int8" else 4
+
+    def fn(path, leaf):
+        if isinstance(leaf, QuantizedLinear):
+            raise ValueError(
+                f"leaf {'/'.join(path)} is already quantized — quantize_tree "
+                "expects an fp base (dequantize first to requantize)")
+        if len(path) >= 2 and path[-1] in ELIGIBLE.get(path[-2], ()):
+            if getattr(leaf, "ndim", 0) >= 2:
+                return quantize(leaf, bits, group_size)
+        return leaf
+
+    return _walk(params, fn)
+
+
+def dequantize_tree(params):
+    """fp view of a (possibly) quantized tree — the reference tier's up-front
+    dequantization and the merge/export path."""
+    return jax.tree.map(
+        lambda leaf: dequantize(leaf) if isinstance(leaf, QuantizedLinear)
+        else leaf,
+        params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
+
+
+def has_quantized(params) -> bool:
+    return any(isinstance(leaf, QuantizedLinear)
+               for leaf in jax.tree.leaves(
+                   params, is_leaf=lambda x: isinstance(x, QuantizedLinear)))
+
+
+def tree_quant_mode(params):
+    """"int8" / "int4" when the tree holds quantized leaves, else None.
+    Mixed-bits trees are rejected — checkpoints are quantized one-shot."""
+    bits = {leaf.bits for leaf in jax.tree.leaves(
+                params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
+            if isinstance(leaf, QuantizedLinear)}
+    if not bits:
+        return None
+    if len(bits) > 1:
+        raise ValueError(f"mixed quantization bits in one tree: {bits}")
+    return "int8" if bits.pop() == 8 else "int4"
+
+
+def quant_footprint(params) -> dict:
+    """Byte accounting over the ELIGIBLE (base GEMM) leaves: fp bytes they
+    would occupy, the bytes they actually occupy, and the whole-tree total.
+    Works on trees of arrays or ShapeDtypeStructs."""
+    acc = {"base_fp_bytes": 0, "base_bytes": 0, "total_bytes": 0}
+
+    def leaf_bytes(leaf):
+        return int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+
+    def fn(path, leaf):
+        if isinstance(leaf, QuantizedLinear):
+            acc["base_fp_bytes"] += (int(np.prod(leaf.shape))
+                                     * jnp.dtype(leaf.out_dtype).itemsize)
+            acc["base_bytes"] += leaf.nbytes
+            acc["total_bytes"] += leaf.nbytes
+        else:
+            b = leaf_bytes(leaf)
+            acc["total_bytes"] += b
+            if len(path) >= 2 and path[-1] in ELIGIBLE.get(path[-2], ()):
+                acc["base_fp_bytes"] += b
+                acc["base_bytes"] += b
+        return leaf
+
+    _walk(params, fn)
+    return acc
+
+
+def apply_quant_flag(base, mode, group_size: int = DEFAULT_GROUP, *,
+                     source: str = "checkpoint"):
+    """Reconcile a restored/built base with a ``--quant`` flag.
+
+    fp base + a quant mode -> one-shot quantize; already-matching tree ->
+    returned as-is; a packed tree under a *different* flag is an error (the
+    fp weights are gone — re-quantizing or silently serving the wrong format
+    would corrupt results).
+    """
+    have = tree_quant_mode(base)
+    want = None if mode in (None, "none") else mode
+    if have == want:
+        return base
+    if have is None:
+        return quantize_tree(base, want, group_size)
+    raise ValueError(
+        f"{source} holds a {have}-quantized base but --quant "
+        f"{mode or 'none'} was requested — restore it with --quant {have}")

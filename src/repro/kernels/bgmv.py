@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.lora_matmul import _quant_w_shapes, dequant_block
 from repro.kernels.tiling import LANE, SUBLANE, block, pad_last2, round_up
 
 # kernel block defaults (n, k dims); s and r stay whole in VMEM — serving
@@ -208,6 +209,167 @@ def bgmv_gemv(x, w, a, b, ids, *, interpret: bool = False):
         x = jnp.pad(x, ((0, 0), (0, kp - kdim)))
     ids = jnp.asarray(ids, jnp.int32)
     y = _bgmv_gemv_call(x, w, a, b, ids, bn=bn, bk=bk, interpret=interpret)
+    if np_ != n:
+        y = y[:, :n]
+    return y
+
+
+# ------------------------------------------------------- quantized variants
+#
+# Banked serving over a PACKED frozen base (core/quant.py): the shared base
+# GEMM dequantizes its (bk, bn) tile in VMEM (lora_matmul.dequant_block)
+# while the per-request A/B gather stays exactly as above — adapters are fp
+# by the LoRA contract, only the base is packed.
+
+def _bgmv_kernel_q(ids_ref, x_ref, wd_ref, ws_ref, a_ref, b_ref, out_ref,
+                   p_ref, *, nk, bits):
+    del ids_ref
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((n == 0) & (k == 0))
+    def _init_p():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    @pl.when(k == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xb = x_ref[0].astype(jnp.float32)
+
+    @pl.when(n == 0)
+    def _acc_p():
+        p_ref[...] += xb @ a_ref[0].astype(jnp.float32).T
+
+    out_ref[0] += xb @ dequant_block(wd_ref[...], ws_ref[...], bits)
+
+    @pl.when(k == nk - 1)
+    def _apply_lora():
+        out_ref[0] += p_ref[...] @ b_ref[0].astype(jnp.float32).T
+
+
+def _bgmv_gemv_kernel_q(ids_ref, x_ref, wd_ref, ws_ref, a_ref, b_ref,
+                        out_ref, p_ref, *, nk, bits):
+    del ids_ref
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((n == 0) & (k == 0))
+    def _init_p():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    @pl.when(k == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xb = x_ref[...].astype(jnp.float32)
+
+    @pl.when(n == 0)
+    def _acc_p():
+        p_ref[...] += xb @ a_ref[0].astype(jnp.float32).T
+
+    out_ref[...] += xb @ dequant_block(wd_ref[...], ws_ref[...], bits)
+
+    @pl.when(k == nk - 1)
+    def _apply_lora():
+        out_ref[...] += p_ref[...] @ b_ref[0].astype(jnp.float32).T
+
+
+def _pad_quant_operands(wd, ws, a, b, bits, kdim, n, r):
+    """Packed-base twin of :func:`_pad_operands`: data rows pad to kp (int8)
+    or kp/2 (int4 nibble pairs), scale rows to 1 / kp/G; zero scales make
+    the padding dequantize to exact zeros."""
+    bn = block(n, BN, LANE)
+    bk = block(kdim, BK, LANE)
+    kp, np_ = round_up(kdim, bk), round_up(n, bn)
+    rp = round_up(r, SUBLANE)
+    if bits == 8:
+        wd = pad_last2(wd, kp, np_)
+        ws = pad_last2(ws, 1, np_)
+    else:
+        gsize = (wd.shape[-2] * 2) // ws.shape[-2]
+        wd = pad_last2(wd, kp // 2, np_)
+        ws = pad_last2(ws, kp // gsize, np_)
+    a = pad_last2(a, rp, kp)
+    b = pad_last2(b, np_, rp)
+    return wd, ws, a, b, bn, bk, kp, np_
+
+
+def bgmv_matmul_quant(x, wd, ws, a, b, ids, *, bits, interpret: bool = False):
+    """:func:`bgmv_matmul` over a packed base: x (B, s, k), wd/ws per
+    ``dequant_block``, a (K, r, k), b (K, n, r), ids (B,) -> (B, s, n)."""
+    bsz, s, kdim = x.shape
+    n = wd.shape[-1]
+    r = a.shape[1]
+    wd, ws, a, b, bn, bk, kp, np_ = _pad_quant_operands(
+        wd, ws, a, b, bits, kdim, n, r)
+    r = a.shape[1]
+    sp = round_up(s, SUBLANE)
+    if sp != s or kp != kdim:
+        x = jnp.pad(x, ((0, 0), (0, sp - s), (0, kp - kdim)))
+    ids = jnp.asarray(ids, jnp.int32)
+    gsize = 0 if bits == 8 else kp // ws.shape[-2]
+    bwd, bws = _quant_w_shapes(bits, gsize, bk, bn)
+    nn, nk = np_ // bn, kp // bk
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, sp, bk), lambda i, j, k, ids: (i, 0, k)),
+            pl.BlockSpec(bwd, lambda i, j, k, ids: (k, j)),
+            (pl.BlockSpec(bws, lambda i, j, k, ids: (0, j)) if bits == 8
+             else pl.BlockSpec(bws, lambda i, j, k, ids: (k, j))),
+            pl.BlockSpec((1, r, bk), lambda i, j, k, ids: (ids[i], 0, k)),
+            pl.BlockSpec((1, bn, r), lambda i, j, k, ids: (ids[i], j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sp, bn), lambda i, j, k, ids: (i, 0, j)),
+        scratch_shapes=[pltpu.VMEM((sp, a.shape[1]), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        functools.partial(_bgmv_kernel_q, nk=nk, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, sp, np_), jnp.float32),
+        interpret=interpret,
+    )(ids, x, wd, ws, a, b)
+    if sp != s or np_ != n:
+        y = y[:, :s, :n]
+    return y
+
+
+def bgmv_gemv_quant(x, wd, ws, a, b, ids, *, bits, interpret: bool = False):
+    """Single-token packed-base variant: x (B, k) -> (B, n) fp32."""
+    bsz, kdim = x.shape
+    n = wd.shape[-1]
+    r = a.shape[1]
+    wd, ws, a, b, bn, bk, kp, np_ = _pad_quant_operands(
+        wd, ws, a, b, bits, kdim, n, r)
+    r = a.shape[1]
+    if kp != kdim:
+        x = jnp.pad(x, ((0, 0), (0, kp - kdim)))
+    ids = jnp.asarray(ids, jnp.int32)
+    gsize = 0 if bits == 8 else kp // ws.shape[-2]
+    bwd, bws = _quant_w_shapes(bits, gsize, bk, bn)
+    nn, nk = np_ // bn, kp // bk
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, j, k, ids: (i, k)),
+            pl.BlockSpec(bwd, lambda i, j, k, ids: (k, j)),
+            (pl.BlockSpec(bws, lambda i, j, k, ids: (0, j)) if bits == 8
+             else pl.BlockSpec(bws, lambda i, j, k, ids: (k, j))),
+            pl.BlockSpec((1, r, bk), lambda i, j, k, ids: (ids[i], 0, k)),
+            pl.BlockSpec((1, bn, r), lambda i, j, k, ids: (ids[i], j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, k, ids: (i, j)),
+        scratch_shapes=[pltpu.VMEM((1, a.shape[1]), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        functools.partial(_bgmv_gemv_kernel_q, nk=nk, bits=bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, np_), jnp.float32),
+        interpret=interpret,
+    )(ids, x, wd, ws, a, b)
     if np_ != n:
         y = y[:, :n]
     return y

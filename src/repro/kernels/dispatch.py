@@ -38,8 +38,11 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bgmv import bgmv_gemv, bgmv_matmul
-from repro.kernels.lora_matmul import lora_matmul_vjp
+from repro.core.quant import QuantizedLinear, dequantize
+from repro.kernels.bgmv import (bgmv_gemv, bgmv_gemv_quant, bgmv_matmul,
+                                bgmv_matmul_quant)
+from repro.kernels.lora_matmul import (lora_matmul_quant_vjp, lora_matmul_vjp,
+                                       quant_matmul_vjp)
 from repro.kernels import tiling
 
 MODES = ("reference", "interpret", "pallas")
@@ -60,7 +63,8 @@ _forced = contextvars.ContextVar("repro_forced_mode", default=None)
 # single-threaded tests/debugging only — cached jit calls don't re-count,
 # and concurrent traces share it.  Routing correctness itself is isolated
 # via the contextvars above.
-stats = {"fused": 0, "reference": 0, "batched": 0, "bgmv": 0, "paged": 0}
+stats = {"fused": 0, "reference": 0, "batched": 0, "bgmv": 0, "paged": 0,
+         "quant": 0}
 
 
 def reset_stats() -> None:
@@ -135,6 +139,67 @@ def fused_lora_apply(x2, w, a, b, gamma, *, interpret: bool):
     return y
 
 
+def _pad_quant(wq: QuantizedLinear, kp: int, np_: int):
+    """Zero-pad a packed base leaf to the kernel's padded (kp, np_) logical
+    tile: data rows pad to kp (int8) / kp/2 (int4 nibble pairs), scale rows
+    to 1 / kp/G.  Zero data dequantizes to zero regardless of scale, so the
+    padding stays exact."""
+    if wq.bits == 8:
+        return (tiling.pad_last2(wq.data, kp, np_),
+                tiling.pad_last2(wq.scales, 1, np_))
+    return (tiling.pad_last2(wq.data, kp // 2, np_),
+            tiling.pad_last2(wq.scales, kp // wq.group_size, np_))
+
+
+def fused_lora_apply_quant(x2, wq, a, b, gamma, *, interpret: bool):
+    """Packed-base twin of :func:`fused_lora_apply` — same block selection
+    and padding, but the W operand ships as (packed data, scales) and the
+    kernel dequantizes per-tile in VMEM.  Group sizes are powers of two
+    <= the 128 lane tile (core/quant.py), so every k-block is group-aligned
+    by construction."""
+    m, kdim = x2.shape
+    n = wq.shape[-1]
+    r = a.shape[0]
+    if 0 in (m, kdim, n, r):
+        w = dequantize(wq)
+        return x2 @ w + gamma * ((x2 @ a.T) @ b.T)
+    bm = tiling.block(m, BM, tiling.SUBLANE)
+    bn = tiling.block(n, BN, tiling.LANE)
+    bk = tiling.block(kdim, BK, tiling.LANE)
+    mp = tiling.round_up(m, bm)
+    kp, np_ = tiling.round_up(kdim, bk), tiling.round_up(n, bn)
+    rp = tiling.round_up(r, tiling.SUBLANE)
+    wd, ws = _pad_quant(wq, kp, np_)
+    y = lora_matmul_quant_vjp(tiling.pad_last2(x2, mp, kp), wd, ws,
+                              tiling.pad_last2(a, rp, kp),
+                              tiling.pad_last2(b, np_, rp), gamma,
+                              bits=wq.bits, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+    if mp != m or np_ != n:
+        y = y[:m, :n]
+    return y
+
+
+def quant_base_apply(x2, wq, *, interpret: bool):
+    """Base-only packed GEMM (no adapter): pad, run the fused dequant+GEMM
+    kernel, slice — the MLP / un-adapted projection path."""
+    m, kdim = x2.shape
+    n = wq.shape[-1]
+    if 0 in (m, kdim, n):
+        return x2 @ dequantize(wq)
+    bm = tiling.block(m, BM, tiling.SUBLANE)
+    bn = tiling.block(n, BN, tiling.LANE)
+    bk = tiling.block(kdim, BK, tiling.LANE)
+    mp = tiling.round_up(m, bm)
+    kp, np_ = tiling.round_up(kdim, bk), tiling.round_up(n, bn)
+    wd, ws = _pad_quant(wq, kp, np_)
+    y = quant_matmul_vjp(tiling.pad_last2(x2, mp, kp), wd, ws, bits=wq.bits,
+                         bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if mp != m or np_ != n:
+        y = y[:m, :n]
+    return y
+
+
 # ----------------------------------------------------------------- dispatch
 
 def lora_linear_batched(x, w, lora, gamma: float = 1.0):
@@ -171,7 +236,10 @@ def lora_linear_batched(x, w, lora, gamma: float = 1.0):
             f"{None if ids is None else ids.shape}")
     stats["batched"] += 1
     mode = resolve_mode()
-    if mode == "reference" or 0 in (*x.shape, w.shape[1], a.shape[-2]):
+    quantized = isinstance(w, QuantizedLinear)
+    if mode == "reference" or 0 in (*x.shape, w.shape[-1], a.shape[-2]):
+        if quantized:   # reference tier: dequantize up front (parity policy)
+            w = dequantize(w)
         ar = a if ids is None else jnp.take(a, ids, axis=0)
         br = b if ids is None else jnp.take(b, ids, axis=0)
         y = x @ w
@@ -190,6 +258,15 @@ def lora_linear_batched(x, w, lora, gamma: float = 1.0):
     ids_arr = (jnp.arange(x.shape[0], dtype=jnp.int32) if ids is None
                else ids)
     xc = x.astype(out_dtype)
+    if quantized:
+        stats["quant"] += 1
+        if x.shape[1] == 1:
+            y = bgmv_gemv_quant(xc[:, 0], w.data, w.scales, a, b, ids_arr,
+                                bits=w.bits, interpret=interpret)
+            return y[:, None, :].astype(out_dtype)
+        return bgmv_matmul_quant(xc, w.data, w.scales, a, b, ids_arr,
+                                 bits=w.bits,
+                                 interpret=interpret).astype(out_dtype)
     if x.shape[1] == 1:
         y = bgmv_gemv(xc[:, 0], w, a, b, ids_arr, interpret=interpret)
         return y[:, None, :].astype(out_dtype)
@@ -208,15 +285,30 @@ def lora_linear(x, w, lora=None, gamma: float = 0.0):
     if lora is not None and lora["a"].ndim == 3:
         return lora_linear_batched(x, w, lora, gamma)
     mode = resolve_mode()
-    if (lora is None or mode == "reference"
-            or 0 in (*x.shape, w.shape[1], lora["a"].shape[0])):
-        # empty operands take the reference expression on every tier —
-        # there is nothing to fuse and the kernel blocks would be 0-sized
+    quantized = isinstance(w, QuantizedLinear)
+    empty = (0 in (*x.shape, w.shape[-1])
+             or (lora is not None and lora["a"].shape[0] == 0))
+    if (mode == "reference" or empty
+            or (lora is None and not quantized)):
+        # reference tier / empty operands take the jnp expression on every
+        # tier (nothing to fuse; kernel blocks would be 0-sized).  Packed
+        # bases dequantize to fp UP FRONT here — this is the parity-bounds
+        # ground truth the fused tiers are pinned against.
         stats["reference"] += 1
-        y = x @ w
+        wf = dequantize(w) if quantized else w
+        y = x @ wf
         if lora is not None:
             y = y + gamma * ((x @ lora["a"].T) @ lora["b"].T)
         return y
+    lead = x.shape[:-1]
+    if lora is None:
+        # quantized base-only projection on a fused tier: dequant-in-VMEM
+        # GEMM kernel (the MLP / un-adapted projection bandwidth path)
+        stats["quant"] += 1
+        out_dtype = jnp.result_type(x.dtype, w.dtype)
+        x2 = x.reshape(-1, x.shape[-1]).astype(out_dtype)
+        y = quant_base_apply(x2, w, interpret=(mode == "interpret"))
+        return y.reshape(*lead, w.shape[-1])
     if isinstance(gamma, jax.core.Tracer):
         raise TypeError(
             "the fused kernel tier needs a static (python float) gamma — it "
@@ -224,7 +316,6 @@ def lora_linear(x, w, lora=None, gamma: float = 0.0):
             "a static argument (jit static_argnames) or via closure, as "
             "core/federated.py does.")
     stats["fused"] += 1
-    lead = x.shape[:-1]
     # match the reference tier's output dtype under mixed precision (e.g.
     # bf16 activations x fp32 weights — or fp32 adapters on a bf16 base —
     # promote to fp32 in the jnp expression): the kernel computes in fp32
@@ -232,6 +323,11 @@ def lora_linear(x, w, lora=None, gamma: float = 0.0):
     out_dtype = jnp.result_type(x.dtype, w.dtype, lora["a"].dtype,
                                 lora["b"].dtype)
     x2 = x.reshape(-1, x.shape[-1]).astype(out_dtype)
-    y = fused_lora_apply(x2, w, lora["a"], lora["b"], float(gamma),
-                         interpret=(mode == "interpret"))
-    return y.reshape(*lead, w.shape[1])
+    if quantized:
+        stats["quant"] += 1
+        y = fused_lora_apply_quant(x2, w, lora["a"], lora["b"], float(gamma),
+                                   interpret=(mode == "interpret"))
+    else:
+        y = fused_lora_apply(x2, w, lora["a"], lora["b"], float(gamma),
+                             interpret=(mode == "interpret"))
+    return y.reshape(*lead, w.shape[-1])

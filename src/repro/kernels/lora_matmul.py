@@ -39,6 +39,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -297,3 +298,304 @@ def lora_matmul_vjp(x, w, a, b, gamma, *, bm=256, bn=256, bk=512,
     n = w.shape[1]
     bm, bn, bk = _clamp_blocks(m, n, kdim, bm, bn, bk)
     return _vjp_op(float(gamma), bm, bn, bk, bool(interpret))(x, w, a, b)
+
+
+# ------------------------------------------------------- quantized variants
+#
+# The frozen base weight arrives PACKED (core/quant.py): int8 per-channel
+# (data (k, n) int8 + scales (1, n)) or int4 grouped (data (k/2, n) uint8,
+# two values per byte along k, + scales (k/G, n)).  The BlockSpecs DMA the
+# packed tile + its scale rows into VMEM and `dequant_block` expands them
+# there — fp base weights never exist in HBM.  Everything else (schedule,
+# LoRA delta, residuals, backward) mirrors the fp kernels above.
+
+def _unpack4(wd):
+    """uint8 (rows, n) packed nibble pairs -> int32 (2*rows, n) in [-8, 7];
+    row 2t is the low nibble of packed row t, row 2t+1 the high nibble."""
+    wi = wd.astype(jnp.int32)
+    lo = wi & 0xF
+    hi = (wi >> 4) & 0xF
+    lo = lo - 2 * (lo & 0x8)    # sign-extend 4-bit two's complement
+    hi = hi - 2 * (hi & 0x8)
+    return jnp.stack([lo, hi], axis=1).reshape(wd.shape[0] * 2, wd.shape[1])
+
+
+def dequant_block(wd, ws, bits):
+    """Expand one packed VMEM tile to its fp32 (bk, bn) block.
+
+    int8: wd (bk, bn) int8, ws (1, bn) — per-channel scale broadcast.
+    int4: wd (bk/2, bn) uint8, ws (bk/G, bn) — per-group scale rows; the
+    group size G is implied by the shapes (G = bk // ws rows)."""
+    if bits == 8:
+        return wd.astype(jnp.float32) * ws.astype(jnp.float32)
+    vals = _unpack4(wd).astype(jnp.float32)      # (bk, bn)
+    ng, bn = ws.shape
+    g = vals.shape[0] // ng
+    vals = vals.reshape(ng, g, bn) * ws.astype(jnp.float32)[:, None, :]
+    return vals.reshape(ng * g, bn)
+
+
+def _quant_w_shapes(bits, gsize, bk, bn):
+    """(data block, scales block) VMEM tile shapes for one (bk, bn) W tile."""
+    if bits == 8:
+        return (bk, bn), (1, bn)
+    return (bk // 2, bn), (bk // gsize, bn)
+
+
+def _fwd_kernel_q(x_ref, wd_ref, ws_ref, a_ref, b_ref, out_ref, p_ref, *,
+                  gamma, nk, bits):
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((n == 0) & (k == 0))
+    def _init_p():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    @pl.when(k == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xb = x_ref[...].astype(jnp.float32)
+
+    @pl.when(n == 0)
+    def _acc_p():
+        p_ref[...] += xb @ a_ref[...].astype(jnp.float32).T
+
+    out_ref[...] += xb @ dequant_block(wd_ref[...], ws_ref[...], bits)
+
+    @pl.when(k == nk - 1)
+    def _apply_lora():
+        out_ref[...] += gamma * (p_ref[...] @
+                                 b_ref[...].astype(jnp.float32).T)
+
+
+def _quant_dims(x_m, wd, ws, bits, bm, bn, bk):
+    """Grid dims + packed block shapes for a padded quant matmul; the padded
+    logical k comes from the packed data rows."""
+    kdim = wd.shape[0] * (2 if bits == 4 else 1)
+    n = wd.shape[1]
+    gsize = 0 if bits == 8 else kdim // ws.shape[0]
+    assert x_m % bm == 0 and n % bn == 0 and kdim % bk == 0, (x_m, n, kdim)
+    bwd, bws = _quant_w_shapes(bits, gsize, bk, bn)
+    return kdim, n, bwd, bws
+
+
+def _fwd_call_q(x, wd, ws, a, b, gamma, *, bits, bm, bn, bk, interpret,
+                scratch):
+    m = x.shape[0]
+    r = a.shape[0]
+    kdim, n, bwd, bws = _quant_dims(m, wd, ws, bits, bm, bn, bk)
+    nm, nn, nk = m // bm, n // bn, kdim // bk
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),      # x
+        pl.BlockSpec(bwd, lambda i, j, k: (k, j)),           # packed W
+        (pl.BlockSpec(bws, lambda i, j, k: (0, j)) if bits == 8
+         else pl.BlockSpec(bws, lambda i, j, k: (k, j))),    # scales
+        pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),       # a
+        pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),       # b
+    ]
+    kern = functools.partial(_fwd_kernel_q, gamma=gamma, nk=nk, bits=bits)
+    if scratch:
+        return pl.pallas_call(
+            kern, grid=(nm, nn, nk), in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
+            interpret=interpret)(x, wd, ws, a, b)
+    return pl.pallas_call(
+        kern, grid=(nm, nn, nk), in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((bm, r), lambda i, j, k: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.float32),
+                   jax.ShapeDtypeStruct((m, r), jnp.float32)],
+        interpret=interpret)(x, wd, ws, a, b)
+
+
+def _bwd_dx_kernel_q(g_ref, wd_ref, ws_ref, a_ref, b_ref, dx_ref, q_ref, *,
+                     gamma, nt, bits):
+    j = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((j == 0) & (t == 0))
+    def _init_q():
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    @pl.when(t == 0)
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    gb = g_ref[...].astype(jnp.float32)
+
+    @pl.when(j == 0)
+    def _acc_q():
+        q_ref[...] += gb @ b_ref[...].astype(jnp.float32)
+
+    dx_ref[...] += gb @ dequant_block(wd_ref[...], ws_ref[...], bits).T
+
+    @pl.when(t == nt - 1)
+    def _apply_lora():
+        dx_ref[...] += gamma * (q_ref[...] @ a_ref[...].astype(jnp.float32))
+
+
+def _bwd_dx_call_q(g, wd, ws, a, b, gamma, *, bits, bm, bn, bk, interpret):
+    m, n = g.shape
+    r = a.shape[0]
+    kdim = wd.shape[0] * (2 if bits == 4 else 1)
+    gsize = 0 if bits == 8 else kdim // ws.shape[0]
+    bwd_, bws = _quant_w_shapes(bits, gsize, bk, bn)
+    nm, nkb, nt = m // bm, kdim // bk, n // bn
+    return pl.pallas_call(
+        functools.partial(_bwd_dx_kernel_q, gamma=gamma, nt=nt, bits=bits),
+        grid=(nm, nkb, nt),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, t)),   # g
+            pl.BlockSpec(bwd_, lambda i, j, t: (j, t)),       # packed W
+            (pl.BlockSpec(bws, lambda i, j, t: (0, t)) if bits == 8
+             else pl.BlockSpec(bws, lambda i, j, t: (j, t))),  # scales
+            pl.BlockSpec((r, bk), lambda i, j, t: (0, j)),    # a
+            pl.BlockSpec((bn, r), lambda i, j, t: (t, 0)),    # b
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, j)),   # dx
+            pl.BlockSpec((bm, r), lambda i, j, t: (i, 0)),    # q
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+                   jax.ShapeDtypeStruct((m, r), jnp.float32)],
+        interpret=interpret,
+    )(g, wd, ws, a, b)
+
+
+def _float0(arr):
+    return np.zeros(arr.shape, dtype=jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=64)
+def _vjp_op_q(gamma, bits, bm, bn, bk, interpret):
+    """Quantized-base custom VJP.  The base is frozen by the LoRA contract:
+    the packed data gets a float0 cotangent and the scales get zeros — this
+    op is NOT meant for differentiating through the quantization itself."""
+    kw = dict(bits=bits, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+    @jax.custom_vjp
+    def op(x, wd, ws, a, b):
+        y = _fwd_call_q(x, wd, ws, a, b, gamma, scratch=True, **kw)
+        return y.astype(x.dtype)
+
+    def fwd(x, wd, ws, a, b):
+        y, p = _fwd_call_q(x, wd, ws, a, b, gamma, scratch=False, **kw)
+        return y.astype(x.dtype), (x, wd, ws, a, b, p)
+
+    def bwd(res, g):
+        x, wd, ws, a, b, p = res
+        dx, q = _bwd_dx_call_q(g, wd, ws, a, b, gamma, **kw)
+        da = _bwd_da_call(q, x, gamma, bm=bm, bk=bk, interpret=interpret)
+        db = _bwd_db_call(g, p, gamma, bm=bm, bn=bn, interpret=interpret)
+        return (dx.astype(x.dtype), _float0(wd), jnp.zeros_like(ws),
+                da.astype(a.dtype), db.astype(b.dtype))
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def lora_matmul_quant_vjp(x, wd, ws, a, b, gamma, *, bits, bm=256, bn=256,
+                          bk=512, interpret=False):
+    """Fused LoRA matmul over a PACKED base: x (m, k), data/scales per
+    ``dequant_block``, a (r, k), b (n, r) -> (m, n) in x.dtype.  All dims
+    must already be padded to block multiples (kernels/dispatch does the
+    padding — packed rows pad to bk/2, scale rows to bk/G)."""
+    return _vjp_op_q(float(gamma), int(bits), bm, bn, bk,
+                     bool(interpret))(x, wd, ws, a, b)
+
+
+# base-only quantized GEMM (no adapter): y = x @ dequant(W) — the MLP and
+# un-adapted projection path, where the packed base is the whole bandwidth
+# story on decode.
+
+def _qmm_kernel(x_ref, wd_ref, ws_ref, out_ref, *, bits):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += (x_ref[...].astype(jnp.float32)
+                     @ dequant_block(wd_ref[...], ws_ref[...], bits))
+
+
+def _qmm_call(x, wd, ws, *, bits, bm, bn, bk, interpret):
+    m = x.shape[0]
+    kdim, n, bwd_, bws = _quant_dims(m, wd, ws, bits, bm, bn, bk)
+    nm, nn, nk = m // bm, n // bn, kdim // bk
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, bits=bits),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec(bwd_, lambda i, j, k: (k, j)),
+            (pl.BlockSpec(bws, lambda i, j, k: (0, j)) if bits == 8
+             else pl.BlockSpec(bws, lambda i, j, k: (k, j))),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, wd, ws)
+
+
+def _qmm_dx_kernel(g_ref, wd_ref, ws_ref, dx_ref, *, bits):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    dx_ref[...] += (g_ref[...].astype(jnp.float32)
+                    @ dequant_block(wd_ref[...], ws_ref[...], bits).T)
+
+
+def _qmm_dx_call(g, wd, ws, *, bits, bm, bn, bk, interpret):
+    m, n = g.shape
+    kdim = wd.shape[0] * (2 if bits == 4 else 1)
+    gsize = 0 if bits == 8 else kdim // ws.shape[0]
+    bwd_, bws = _quant_w_shapes(bits, gsize, bk, bn)
+    nm, nkb, nt = m // bm, kdim // bk, n // bn
+    return pl.pallas_call(
+        functools.partial(_qmm_dx_kernel, bits=bits),
+        grid=(nm, nkb, nt),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, t)),
+            pl.BlockSpec(bwd_, lambda i, j, t: (j, t)),
+            (pl.BlockSpec(bws, lambda i, j, t: (0, t)) if bits == 8
+             else pl.BlockSpec(bws, lambda i, j, t: (j, t))),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+        interpret=interpret,
+    )(g, wd, ws)
+
+
+@functools.lru_cache(maxsize=64)
+def _qmm_op(bits, bm, bn, bk, interpret):
+    kw = dict(bits=bits, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+    @jax.custom_vjp
+    def op(x, wd, ws):
+        return _qmm_call(x, wd, ws, **kw).astype(x.dtype)
+
+    def fwd(x, wd, ws):
+        return _qmm_call(x, wd, ws, **kw).astype(x.dtype), (x, wd, ws)
+
+    def bwd(res, g):
+        x, wd, ws = res
+        dx = _qmm_dx_call(g, wd, ws, **kw)
+        return dx.astype(x.dtype), _float0(wd), jnp.zeros_like(ws)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def quant_matmul_vjp(x, wd, ws, *, bits, bm=256, bn=256, bk=512,
+                     interpret=False):
+    """Differentiable base-only packed GEMM (frozen base: dx only; the packed
+    data/scales get float0/zero cotangents).  Pre-padded operands, as with
+    :func:`lora_matmul_quant_vjp`."""
+    return _qmm_op(int(bits), bm, bn, bk, bool(interpret))(x, wd, ws)

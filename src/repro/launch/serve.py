@@ -42,6 +42,9 @@ from repro.checkpoint.io import load_adapter_state
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LoRAConfig
 from repro.core.lora import AdapterBank, AdapterSet, init_adapter_set
+from repro.core.quant import (apply_quant_flag, dequantize_tree,
+                              has_quantized)
+from repro.kernels import dispatch
 from repro.models.api import build_model
 from repro.models.transformer import (merge_paged_cache, paged_prefill_view,
                                       reset_paged_blocks)
@@ -100,6 +103,23 @@ def _jit_banked_step(model):
 
 # ------------------------------------------------------------ compiled engine
 
+def _prepare_base(m, params):
+    """Loop-invariant handling of a packed frozen base (core/quant.py).
+
+    On the REFERENCE tier the policy is dequantize-up-front: doing it here,
+    once per compiled call, makes the fp view scan-invariant — XLA
+    materializes it once instead of re-dequantizing every decode step
+    (mirrors the federated engine's run_chunk hoist).  Fused tiers return
+    the params untouched: the kernels dequantize per-tile in VMEM and the
+    packed bytes are exactly what keeps decode bandwidth-cheap."""
+    if not has_quantized(params):
+        return params
+    with dispatch.scope(m.cfg.use_pallas):
+        if dispatch.resolve_mode() == "reference":
+            return dequantize_tree(params)
+    return params
+
+
 def _prepare_adapters(m, adapters):
     """Loop-invariant adapter preparation, shared by every compiled engine
     entry point: gamma folds, rank masking, the bank's per-request gather,
@@ -144,6 +164,7 @@ def _compiled_generate(model):
                 temperature):
             b, p = prompt.shape
             vocab = m.cfg.vocab_size
+            params = _prepare_base(m, params)
             adapters = _prepare_adapters(m, adapters)
             cache = m.init_cache(b, max_len)
             logits, cache = m.prefill(params, cache, prompt, adapters,
@@ -353,6 +374,7 @@ def _jit_paged_admit(model):
                   adapters):
             g, _ = prompts.shape
             vocab = m.cfg.vocab_size
+            params = _prepare_base(m, params)
             adapters = _prepare_adapters(m, adapters)
             cache = reset_paged_blocks(cache, blocks)
             cross = (m.cfg.encoder_frames if m.cfg.family == "audio" else 0)
@@ -377,6 +399,7 @@ def _jit_paged_chunk(model):
         def chunk_run(params, cache, tok, pos, active, table, adapters, *,
                       steps):
             vocab = m.cfg.vocab_size
+            params = _prepare_base(m, params)
             adapters = _prepare_adapters(m, adapters)
 
             def step(carry, _):
@@ -592,6 +615,13 @@ def main(argv=None):
                     help="federated checkpoint (.npz) to serve: restores "
                          "the trained AdapterSet — gammas and rank mask "
                          "included — and registers every client in the bank")
+    ap.add_argument("--quant", default="none", choices=("none", "int8", "int4"),
+                    help="serve from a quantized frozen base: one-shot "
+                         "post-load quantization of the eligible GEMM "
+                         "weights (int8 per-channel / int4 grouped); "
+                         "adapters stay fp, kernels dequant in VMEM")
+    ap.add_argument("--quant-group", type=int, default=64,
+                    help="int4 group size (power of two <= 128)")
     ap.add_argument("--merge", type=int, default=None, metavar="CLIENT",
                     help="classic single-tenant path: merge this client's "
                          "adapters into the base weights (zero serving "
@@ -616,6 +646,10 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = build_model(cfg)
     base, bank = build_bank(args, cfg, model)
+    # one-shot post-load quantization (or flag/checkpoint reconciliation: a
+    # packed checkpoint under a mismatched --quant is a hard error)
+    src = (f"checkpoint '{args.resume}'" if args.resume else "fresh base")
+    base = apply_quant_flag(base, args.quant, args.quant_group, source=src)
     prompt = jax.random.randint(jax.random.key(2), (args.batch, 4), 0,
                                 cfg.vocab_size)
     max_len = 4 + args.steps

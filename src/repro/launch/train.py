@@ -22,6 +22,7 @@ from repro.configs import ARCHS, get_config
 from repro.configs.base import FederatedConfig, LoRAConfig, OptimizerConfig
 from repro.core.aggregation import STRATEGIES
 from repro.core.federated import FederatedTrainer
+from repro.core.quant import apply_quant_flag, quantize_tree
 from repro.data.synthetic import FederatedDataset
 from repro.launch.mesh import mesh_from_spec
 from repro.models.api import build_model
@@ -69,6 +70,12 @@ def main(argv=None):
     ap.add_argument("--mesh", default="",
                     help="mesh spec: 'DxM'/'PxDxM' (e.g. 4x2, 2x16x16), "
                          "'pod', 'multipod'; empty = no mesh")
+    ap.add_argument("--quant", default="none", choices=("none", "int8", "int4"),
+                    help="store the frozen base quantized (int8 per-channel "
+                         "/ int4 grouped); LoRA state stays fp — kernels "
+                         "dequantize per-tile in VMEM (core/quant.py)")
+    ap.add_argument("--quant-group", type=int, default=64,
+                    help="int4 group size (power of two <= 128)")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     ap.add_argument("--resume", default=None,
                     help="checkpoint to restore (incl. PRNG key + round, so "
@@ -87,6 +94,17 @@ def main(argv=None):
                           dirichlet_alpha=args.dirichlet_alpha,
                           seed=args.seed)
     mesh = mesh_from_spec(args.mesh)
+    base_params = None
+    if args.quant != "none":
+        if mesh is not None:
+            raise SystemExit("--quant is single-host for now (packed leaves "
+                             "carry no sharding annotations); drop --mesh")
+        # replicate the trainer's base-init split so the packed tree
+        # quantizes the *identical* fp base the fp run would have trained on
+        import jax
+        kb, _ = jax.random.split(jax.random.key(args.seed))
+        base_params = quantize_tree(model.init(kb), args.quant,
+                                    args.quant_group)
     tr = FederatedTrainer(
         model, ds,
         lora_cfg=LoRAConfig(rank=args.rank, ranks=ranks, alpha=args.alpha,
@@ -100,10 +118,14 @@ def main(argv=None):
                                 participation=args.participation,
                                 weight_by_size=args.weight_by_size),
         opt_cfg=OptimizerConfig(name=args.optimizer, lr=args.lr),
-        seed=args.seed, data_mode=args.data_mode,
+        seed=args.seed, base_params=base_params, data_mode=args.data_mode,
         chunk_rounds=args.chunk_rounds, mesh=mesh)
     if args.resume:
         tr.restore(args.resume)
+        # an fp checkpoint restored under --quant is packed once here; a
+        # packed checkpoint under a mismatched flag is a hard error
+        tr.base = apply_quant_flag(tr.base, args.quant, args.quant_group,
+                                   source=f"checkpoint '{args.resume}'")
         print(f"# resumed from {args.resume} at round {tr.round_idx}")
     aset = tr.adapters     # scaling factors travel with the state
     gamma_str = (f"gamma={aset.gamma:.4f} rank={args.rank}" if ranks is None
@@ -113,7 +135,8 @@ def main(argv=None):
           f"strategy={args.strategy} scaling={args.scaling} "
           f"{gamma_str} N={args.clients}"
           + (" weight-by-size" if args.weight_by_size else "")
-          + (f" mesh={args.mesh}" if args.mesh else ""))
+          + (f" mesh={args.mesh}" if args.mesh else "")
+          + (f" quant={args.quant}" if args.quant != "none" else ""))
     tr.run(args.rounds, log_every=max(1, args.rounds // 10))
     ppl = tr.eval_perplexity()
     print(f"# final held-out perplexity: {ppl:.3f}")

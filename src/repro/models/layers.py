@@ -82,15 +82,18 @@ def mlp_params(cfg, key, d_in: int, d_ff: int):
 
 
 def mlp_apply(cfg, params, x, adapters=None):
-    """Gated MLP.  ``adapters`` reserved for adapter-on-mlp variants."""
-    up = x @ params["w_up"]
+    """Gated MLP.  ``adapters`` reserved for adapter-on-mlp variants.  The
+    three GEMMs route through ``linear`` so a quantized frozen base
+    (core/quant.py packed leaves) hits the dequant-in-VMEM kernel tier; with
+    fp leaves ``linear`` reduces to the same single XLA GEMM as before."""
+    up = linear(x, params["w_up"])
     if cfg.mlp_variant == "swiglu":
-        h = jax.nn.silu(x @ params["w_gate"]) * up
+        h = jax.nn.silu(linear(x, params["w_gate"])) * up
     elif cfg.mlp_variant == "geglu":
-        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * up
+        h = jax.nn.gelu(linear(x, params["w_gate"]), approximate=True) * up
     else:
         h = jax.nn.gelu(up, approximate=True)
-    return h @ params["w_down"]
+    return linear(h, params["w_down"])
 
 
 def linear(x, w, adapters=None):

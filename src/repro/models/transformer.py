@@ -123,8 +123,10 @@ def _cross_attention(cfg, params, x, ck, cv, adapters=None):
 def build_cross_kv(cfg, p_cross, enc_out):
     """Project encoder output to per-layer cross K/V (no RoPE)."""
     b, t, _ = enc_out.shape
-    k = (enc_out @ p_cross["k"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
-    v = (enc_out @ p_cross["v"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    k = linear(enc_out, p_cross["k"]).reshape(b, t, cfg.num_kv_heads,
+                                              cfg.head_dim)
+    v = linear(enc_out, p_cross["v"]).reshape(b, t, cfg.num_kv_heads,
+                                              cfg.head_dim)
     return k, v
 
 

@@ -1,0 +1,384 @@
+"""Quantized frozen-base conformance (core/quant.py + the quant kernel tier).
+
+Pins the contracts the quantized serving/training path promises:
+
+  (a) round-trip bounds: dequant(quant(w)) error per bits/group-size,
+  (b) kernel parity: the fused dequant-in-VMEM kernels (interpret mode)
+      agree with dequantize-up-front through the SAME blocked fp kernels —
+      the two tiers compute identical fp32 ops, so parity is essentially
+      exact, and both sit within the usual kernel tolerance of the jnp ref,
+  (c) dispatcher routing: quantized leaves take the quant kernels on fused
+      tiers (stats["quant"]) and dequantize up front on the reference tier,
+  (d) model-level logit error vs fp is pinned per mode, and the two tiers
+      agree on the QUANTIZED model itself,
+  (e) checkpoint round-trip: packed leaves restore bit-identical (logits
+      too), and a mismatched --quant flag is a clear error,
+  (f) federated convergence: training on a quantized frozen base tracks the
+      fp loss trajectory within a pinned tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.core.federated import FederatedTrainer
+from repro.core.quant import (QuantizedLinear, apply_quant_flag, dequantize,
+                              dequantize_tree, quant_footprint, quantize,
+                              quantize_tree, tree_quant_mode)
+from repro.data.synthetic import FederatedDataset
+from repro.kernels import dispatch, ref
+from repro.kernels.bgmv import (bgmv_gemv, bgmv_gemv_quant, bgmv_matmul,
+                                bgmv_matmul_quant)
+from repro.kernels.lora_matmul import (lora_matmul_quant_vjp, lora_matmul_vjp,
+                                       quant_matmul_vjp)
+from repro.models.api import build_model
+
+# pinned round-trip bounds: relative max-abs error of dequant(quant(w)) on
+# N(0,1) weights — int8 per-channel lands ~4e-3, int4/G=64 ~7e-2; the pins
+# leave ~50% headroom so a numerics change that halves precision trips them
+RTRIP_REL = {"int8": 0.008, "int4": 0.11}
+# pinned model-level logit error (max-abs, fp32 logits of the small model
+# below): measured int8 ~0.13, int4 ~1.7 — pinned with ~2x headroom
+LOGIT_MAX = {"int8": 0.35, "int4": 3.5}
+
+
+@pytest.fixture(autouse=True)
+def _clean_dispatch():
+    dispatch.force_mode(None)
+    dispatch.reset_stats()
+    yield
+    dispatch.force_mode(None)
+
+
+def _w(k, n, seed=0):
+    return jax.random.normal(jax.random.key(seed), (k, n),
+                             jnp.float32) * k ** -0.5
+
+
+# ------------------------------------------------------- (a) round-trip
+
+@pytest.mark.parametrize("mode,bits", [("int8", 8), ("int4", 4)])
+def test_roundtrip_bounds(mode, bits):
+    w = _w(256, 128)
+    q = quantize(w, bits=bits, group_size=64)
+    back = np.asarray(dequantize(q))
+    rel = np.abs(back - np.asarray(w)).max() / np.abs(np.asarray(w)).max()
+    assert rel < RTRIP_REL[mode], f"{mode} round-trip error {rel:.4f}"
+    assert q.shape == w.shape and q.dtype == w.dtype
+    assert back.shape == w.shape
+
+
+@pytest.mark.parametrize("gsize", [32, 64, 128])
+def test_int4_group_sizes(gsize):
+    w = _w(256, 64, seed=3)
+    q = quantize(w, bits=4, group_size=gsize)
+    rel = (np.abs(np.asarray(dequantize(q)) - np.asarray(w)).max()
+           / np.abs(np.asarray(w)).max())
+    assert rel < RTRIP_REL["int4"]
+    # smaller groups can only help: scales adapt to finer amax structure
+    if gsize < 128:
+        q128 = quantize(w, bits=4, group_size=128)
+        err = lambda qq: float(jnp.abs(dequantize(qq) - w).max())
+        assert err(q) <= err(q128) * 1.05
+
+
+def test_int8_smaller_error_than_int4():
+    w = _w(512, 128, seed=5)
+    e8 = float(jnp.abs(dequantize(quantize(w, bits=8)) - w).max())
+    e4 = float(jnp.abs(dequantize(quantize(w, bits=4)) - w).max())
+    assert e8 < e4
+
+
+def test_footprint_reductions():
+    """The acceptance floors: >= 2x (int8) / >= 3.5x (int4) on the eligible
+    base leaves (here: one pure GEMM weight, the leaf class the tree walk
+    packs)."""
+    w = _w(512, 256)
+    for mode, floor in (("int8", 2.0), ("int4", 3.5)):
+        q = quantize(w, bits=8 if mode == "int8" else 4)
+        assert np.asarray(w).nbytes / q.nbytes >= floor
+
+
+# --------------------------------------------------- (b) kernel parity
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("m,k,n,r", [(64, 128, 64, 4), (64, 192, 128, 8)])
+def test_quant_kernel_matches_dequant_upfront(bits, m, k, n, r):
+    ks = jax.random.split(jax.random.key(1), 4)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = _w(k, n, seed=2)
+    a = jax.random.normal(ks[2], (r, k), jnp.float32) * 0.05
+    b = jax.random.normal(ks[3], (n, r), jnp.float32) * 0.05
+    q = quantize(w, bits=bits, group_size=64)
+    kw = dict(bm=64, bn=64, bk=64, interpret=True)
+    got = lora_matmul_quant_vjp(x, q.data, q.scales, a, b, 1.5, bits=bits,
+                                **kw)
+    want = lora_matmul_vjp(x, dequantize(q), a, b, 1.5, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # and within the usual kernel tolerance of the pure-jnp oracle
+    oracle = ref.lora_matmul_ref(x, dequantize(q), a, b, 1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_kernel_backward_parity(bits):
+    m, k, n, r = 64, 128, 64, 4
+    ks = jax.random.split(jax.random.key(2), 4)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = _w(k, n, seed=4)
+    a = jax.random.normal(ks[2], (r, k), jnp.float32) * 0.05
+    b = jax.random.normal(ks[3], (n, r), jnp.float32) * 0.05
+    q = quantize(w, bits=bits, group_size=64)
+    cot = jax.random.normal(jax.random.key(9), (m, n))
+    kw = dict(bm=64, bn=64, bk=64, interpret=True)
+
+    def fused(x_, a_, b_):
+        return (lora_matmul_quant_vjp(x_, q.data, q.scales, a_, b_, 2.0,
+                                      bits=bits, **kw) * cot).sum()
+
+    def upfront(x_, a_, b_):
+        return (lora_matmul_vjp(x_, dequantize(q), a_, b_, 2.0, **kw)
+                * cot).sum()
+
+    got = jax.grad(fused, argnums=(0, 1, 2))(x, a, b)
+    want = jax.grad(upfront, argnums=(0, 1, 2))(x, a, b)
+    for g1, g2, name in zip(got, want, "xab"):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-6, atol=1e-6, err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_base_only_matmul(bits):
+    x = jax.random.normal(jax.random.key(3), (64, 128), jnp.float32)
+    w = _w(128, 64, seed=6)
+    q = quantize(w, bits=bits, group_size=32)
+    got = quant_matmul_vjp(x, q.data, q.scales, bits=bits, bm=64, bn=64,
+                           bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(x @ dequantize(q)),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_bgmv_quant_parity(bits):
+    B, s, k, n, r, K = 4, 8, 128, 64, 4, 3
+    ks = jax.random.split(jax.random.key(4), 4)
+    x = jax.random.normal(ks[0], (B, s, k), jnp.float32)
+    w = _w(k, n, seed=7)
+    ab = jax.random.normal(ks[1], (K, r, k), jnp.float32) * 0.05
+    bb = jax.random.normal(ks[2], (K, n, r), jnp.float32) * 0.05
+    ids = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    q = quantize(w, bits=bits, group_size=64)
+    got = bgmv_matmul_quant(x, q.data, q.scales, ab, bb, ids, bits=bits,
+                            interpret=True)
+    want = bgmv_matmul(x, dequantize(q), ab, bb, ids, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    got1 = bgmv_gemv_quant(x[:, 0], q.data, q.scales, ab, bb, ids,
+                           bits=bits, interpret=True)
+    want1 = bgmv_gemv(x[:, 0], dequantize(q), ab, bb, ids, interpret=True)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want1),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- (c) dispatcher routing
+
+def test_lora_linear_quantized_reference_tier():
+    x = jax.random.normal(jax.random.key(5), (8, 64), jnp.float32)
+    w = _w(64, 32, seed=8)
+    q = quantize(w, bits=8)
+    got = dispatch.lora_linear(x, q, None, 1.0)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(x @ dequantize(q)),
+                               rtol=1e-6, atol=1e-6)
+    assert dispatch.stats["reference"] > 0 and dispatch.stats["quant"] == 0
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_lora_linear_quantized_fused_tier(bits):
+    x = jax.random.normal(jax.random.key(6), (8, 64), jnp.float32)
+    w = _w(64, 32, seed=9)
+    r = 4
+    a = jax.random.normal(jax.random.key(7), (r, 64)) * 0.05
+    b = jax.random.normal(jax.random.key(8), (32, r)) * 0.05
+    q = quantize(w, bits=bits, group_size=32)
+    with dispatch.scope(True):
+        dispatch.force_mode("interpret")
+        got = dispatch.lora_linear(x, q, {"a": a, "b": b}, 1.0)
+        base_only = dispatch.lora_linear(x, q, None, 1.0)
+    assert dispatch.stats["quant"] >= 2 and dispatch.stats["fused"] >= 1
+    want = x @ dequantize(q) + (x @ a.T) @ b.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(base_only),
+                               np.asarray(x @ dequantize(q)),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ------------------------------------------------- tree walk + flag logic
+
+def _small_model(tier="reference"):
+    cfg = ModelConfig(name=f"quant-{tier}", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=64,
+                      use_pallas=(tier == "interpret"))
+    model = build_model(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+def test_quantize_tree_eligibility_and_mode():
+    model, params = _small_model()
+    qt = quantize_tree(params, "int8")
+    leaves = jax.tree.leaves(
+        qt, is_leaf=lambda l: isinstance(l, QuantizedLinear))
+    n_packed = sum(isinstance(l, QuantizedLinear) for l in leaves)
+    assert n_packed > 0
+    assert tree_quant_mode(qt) == "int8"
+    assert tree_quant_mode(params) is None
+    # embeddings / norms never pack
+    assert not isinstance(qt["embed"], QuantizedLinear)
+    with pytest.raises(ValueError):
+        quantize_tree(qt, "int4")      # re-quantizing packed leaves
+    # dequantize_tree restores plain arrays with the fp shapes
+    back = dequantize_tree(qt)
+    assert jax.tree.structure(back) == jax.tree.structure(params)
+
+
+def test_model_footprint_floors():
+    """Whole-model eligible-leaf accounting meets the acceptance floors."""
+    _, params = _small_model()
+    for mode, floor in (("int8", 2.0), ("int4", 3.5)):
+        foot = quant_footprint(quantize_tree(params, mode))
+        assert foot["base_fp_bytes"] / foot["base_bytes"] >= floor, mode
+
+
+def test_apply_quant_flag():
+    _, params = _small_model()
+    q = apply_quant_flag(params, "int8")
+    assert tree_quant_mode(q) == "int8"
+    assert apply_quant_flag(q, "int8") is q          # matching: no-op
+    assert apply_quant_flag(params, "none") is params
+    with pytest.raises(ValueError, match="int8"):
+        apply_quant_flag(q, "none")                  # packed, fp requested
+    with pytest.raises(ValueError, match="int8"):
+        apply_quant_flag(q, "int4")                  # packed, other mode
+
+
+# ------------------------------------------- (d) model-level conformance
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_model_logit_error_pinned(mode):
+    model, params = _small_model()
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 64)
+    fp = model.forward(params, {"tokens": toks})[0]
+    qlog = model.forward(quantize_tree(params, mode), {"tokens": toks})[0]
+    err = float(jnp.abs(qlog - fp).max())
+    assert err < LOGIT_MAX[mode], f"{mode} logit error {err:.3f}"
+    assert err > 0.0                                 # it IS quantized
+
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_quantized_model_tier_parity(mode):
+    """The quantized model agrees across reference and interpret tiers —
+    the fused in-VMEM dequant computes the same fp32 ops as dequantize-up-
+    front, so the tiers stay within the kernel tolerance of each other."""
+    model, params = _small_model("interpret")
+    qt = quantize_tree(params, mode)
+    toks = jax.random.randint(jax.random.key(2), (1, 8), 0, 64)
+    dispatch.force_mode("reference")
+    ref_logits = model.forward(qt, {"tokens": toks})[0]
+    dispatch.reset_stats()
+    dispatch.force_mode("interpret")
+    fused_logits = model.forward(qt, {"tokens": toks})[0]
+    assert dispatch.stats["quant"] > 0
+    np.testing.assert_allclose(np.asarray(fused_logits),
+                               np.asarray(ref_logits), rtol=2e-4, atol=5e-4)
+
+
+# ------------------------------------------------ (e) checkpoint round-trip
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_checkpoint_roundtrip_bit_identical(tmp_path, mode):
+    model, params = _small_model()
+    qt = quantize_tree(params, mode)
+    path = str(tmp_path / "q.npz")
+    save_pytree(path, {"base": qt})
+    restored = load_pytree(path)["base"]
+    for got, want in zip(
+            jax.tree.leaves(restored,
+                            is_leaf=lambda l: isinstance(l, QuantizedLinear)),
+            jax.tree.leaves(qt,
+                            is_leaf=lambda l: isinstance(l, QuantizedLinear))):
+        if isinstance(want, QuantizedLinear):
+            assert isinstance(got, QuantizedLinear)
+            assert (got.bits, got.group_size, got.k, got.out_dtype) == \
+                   (want.bits, want.group_size, want.k, want.out_dtype)
+            np.testing.assert_array_equal(np.asarray(got.data),
+                                          np.asarray(want.data))
+            np.testing.assert_array_equal(np.asarray(got.scales),
+                                          np.asarray(want.scales))
+        else:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    toks = jax.random.randint(jax.random.key(3), (2, 8), 0, 64)
+    got = model.forward(restored, {"tokens": toks})[0]
+    want = model.forward(qt, {"tokens": toks})[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_restore_with_mismatched_quant_flag_errors(tmp_path):
+    """fp checkpoint -> quantize -> save/restore; restoring the packed
+    checkpoint under a different --quant flag must fail loudly."""
+    _, params = _small_model()
+    path = str(tmp_path / "ck.npz")
+    save_pytree(path, {"base": params})                       # fp checkpoint
+    base = load_pytree(path)["base"]
+    q = apply_quant_flag(base, "int8", source=path)           # one-shot pack
+    qpath = str(tmp_path / "ck_q.npz")
+    save_pytree(qpath, {"base": q})
+    restored = load_pytree(qpath)["base"]
+    assert tree_quant_mode(restored) == "int8"
+    with pytest.raises(ValueError, match="int8"):
+        apply_quant_flag(restored, "int4", source=qpath)
+
+
+# --------------------------------------------- (f) federated convergence
+
+def _trainer(model, base, n=2, seed=0):
+    ds = FederatedDataset(64, n, seq_len=16, batch_per_client=2, seed=seed)
+    return FederatedTrainer(
+        model, ds, lora_cfg=LoRAConfig(rank=4),
+        fed_cfg=FederatedConfig(num_clients=n, local_steps=2),
+        opt_cfg=OptimizerConfig(name="sgd", lr=0.05),
+        seed=seed, base_params=base)
+
+
+def test_federated_convergence_with_quantized_base():
+    """LoRA training over an int8 frozen base tracks the fp loss
+    trajectory within a pinned band, and still makes progress."""
+    model, params = _small_model()
+    hist_fp = _trainer(model, params).run(4)
+    hist_q = _trainer(model, quantize_tree(params, "int8")).run(4)
+    for m_fp, m_q in zip(hist_fp, hist_q):
+        assert abs(m_q["loss"] - m_fp["loss"]) < 0.05, (
+            f"round {m_fp['round']}: quantized loss {m_q['loss']:.4f} vs "
+            f"fp {m_fp['loss']:.4f}")
+
+
+def test_federated_checkpoint_with_quantized_base(tmp_path):
+    """save -> restore round-trips the packed base through the trainer."""
+    model, params = _small_model()
+    tr = _trainer(model, quantize_tree(params, "int4"))
+    tr.run(2)
+    path = str(tmp_path / "fed_q.npz")
+    tr.save(path)
+    tr2 = _trainer(model, quantize_tree(params, "int4"))
+    tr2.restore(path)
+    assert tree_quant_mode(tr2.base) == "int4"
+    h1 = tr.run(1)[-1]["loss"]
+    h2 = tr2.run(1)[-1]["loss"]
+    assert h1 == h2
