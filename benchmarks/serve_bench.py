@@ -51,6 +51,22 @@ clock).  Static batching pays twice at the tail — batch formation delay and
 short requests riding long neighbors — which is exactly what the paged
 scheduler removes; ``p99_static_over_scheduled`` is the headline.
 
+The lifecycle scenario measures adapter HOT-SWAP UNDER LOAD: the same
+saturated request stream through the scheduler three ways —
+
+  static      a static AdapterBank (no publishes; the throughput ceiling)
+  hotswap     a LiveAdapterBank with every tenant resident, a new adapter
+              version published into a rotating slot every 4 scheduler
+              boundaries through the ``on_boundary`` swap window (zero
+              recompiles by construction — the swap donates one padded
+              bank slot between decode chunks)
+  overflow    a LiveAdapterBank with only half the tenants resident, so
+              the stream drives LRU promotion/demotion through the
+              host-RAM store (reported for information)
+
+``hotswap_vs_static`` (scheduled tokens/sec ratio) is the headline: it
+prices continuous publishing, and the CI floor pins it at >= 0.9x.
+
 The quant scenario serves the same model from a QUANTIZED frozen base
 (core/quant.py: int8 per-channel / int4 grouped, adapters fp) on the
 compiled adapter1 path, reporting per mode the eligible-base footprint
@@ -73,7 +89,7 @@ import numpy as np
 
 from benchmarks.common import bench_config
 from repro.configs.base import LoRAConfig
-from repro.core.lora import AdapterBank, init_adapter_set
+from repro.core.lora import AdapterBank, LiveAdapterBank, init_adapter_set
 from repro.launch import serve
 from repro.models.api import build_model
 
@@ -93,6 +109,11 @@ CI_FLOOR_COMPILED_VS_HOSTLOOP = 1.3
 # and the scheduler: static batching's p99 must stay >= this multiple of the
 # scheduled p99 at the same offered load (locally ~2-4x; 1.1 absorbs jitter)
 CI_FLOOR_STATIC_P99_OVER_SCHED = 1.1
+# adapter lifecycle: the scheduler serving through a live bank that takes a
+# publish every 4 boundaries must hold >= this fraction of the static-bank
+# throughput (the swap is one donated slot write between chunks — cheap —
+# and recompiles are zero by construction, so 0.9 is mostly runner jitter)
+CI_FLOOR_HOTSWAP_VS_STATIC = 0.9
 # quantized serving: int8 base decode must hold >= this fraction of fp
 # decode tokens/sec.  On this CPU container the reference tier dequantizes
 # ONCE per compiled call (launch/serve._prepare_base), so quant costs one
@@ -286,6 +307,90 @@ def poisson_scenario(model, params, bank, *, load=SCHED_LOAD, n=SCHED_N,
     return out
 
 
+# lifecycle scenario shape: a saturated stream (everything already arrived
+# — wait=False, pure scheduler throughput), uniform steps so the static and
+# live runs retire identical token counts, one publish every SWAP_EVERY
+# scheduler boundaries into a rotating tenant slot
+LIFE_N = 48
+LIFE_PROMPT = 8
+LIFE_STEPS = 16
+LIFE_SWAP_EVERY = 4
+LIFE_TRIALS = 3
+
+
+def lifecycle_scenario(model, params, bank, sets):
+    """Hot-swap under load: scheduled throughput while publishing adapters.
+
+    The same saturated stream runs through (a) the static bank, (b) a live
+    bank taking a publish every ``LIFE_SWAP_EVERY`` boundaries (every
+    tenant resident — isolates publish cost), and (c) a live bank with
+    half the slots (adds LRU promotion/demotion churn; informational).
+    Best-of-``LIFE_TRIALS`` wall time per discipline, tokens/sec and the
+    ``hotswap_vs_static`` ratio reported."""
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, model.cfg.vocab_size,
+                           (LIFE_N, LIFE_PROMPT)).astype(np.int32)
+    max_len = LIFE_PROMPT + LIFE_STEPS
+    toks = LIFE_N * LIFE_STEPS
+
+    def mk_requests():
+        return [serve.Request(rid=i, prompt=prompts[i], steps=LIFE_STEPS,
+                              adapter_id=int(i % bank.size), arrival=0.0)
+                for i in range(LIFE_N)]
+
+    def run(mk_bank, on_boundary_of=None):
+        best = float("inf")
+        meta = {}
+        for _ in range(LIFE_TRIALS):
+            b = mk_bank()
+            hook = on_boundary_of(b) if on_boundary_of else None
+            serve.serve_scheduled(model, params, mk_requests(), bank=b,
+                                  max_batch=BATCH, block_size=SCHED_BLOCK,
+                                  chunk=SCHED_CHUNK, max_len=max_len,
+                                  wait=False, on_boundary=hook)   # warm
+            b = mk_bank()
+            hook = on_boundary_of(b) if on_boundary_of else None
+            t0 = time.monotonic()
+            serve.serve_scheduled(model, params, mk_requests(), bank=b,
+                                  max_batch=BATCH, block_size=SCHED_BLOCK,
+                                  chunk=SCHED_CHUNK, max_len=max_len,
+                                  wait=False, on_boundary=hook)
+            best = min(best, time.monotonic() - t0)
+            if isinstance(b, LiveAdapterBank):
+                meta = {"publishes": b.version, "hot_swaps": b.swaps,
+                        "promotions": b.promotions, "demotions": b.demotions}
+        return {"tokens_per_sec": toks / best, **meta}
+
+    def swapping(live):
+        def hook(i):
+            if i and i % LIFE_SWAP_EVERY == 0:
+                slot = (i // LIFE_SWAP_EVERY - 1) % len(sets)
+                live.publish(slot, sets[(slot + 1) % len(sets)])
+        return hook
+
+    out = {"n": LIFE_N, "prompt": LIFE_PROMPT, "steps": LIFE_STEPS,
+           "swap_every_boundaries": LIFE_SWAP_EVERY, "max_batch": BATCH,
+           "static": run(lambda: bank),
+           "hotswap": run(lambda: LiveAdapterBank.from_bank(
+               bank, hot_slots=bank.size), swapping),
+           "overflow": run(lambda: LiveAdapterBank.from_bank(
+               bank, hot_slots=bank.size // 2), swapping)}
+    out["hotswap_vs_static"] = (out["hotswap"]["tokens_per_sec"]
+                                / out["static"]["tokens_per_sec"])
+    out["overflow_vs_static"] = (out["overflow"]["tokens_per_sec"]
+                                 / out["static"]["tokens_per_sec"])
+    print("bench,lifecycle,variant,tokens_per_sec,publishes,hot_swaps,"
+          "promotions")
+    for name in ("static", "hotswap", "overflow"):
+        r = out[name]
+        print(f"serve,lifecycle,{name},{r['tokens_per_sec']:.1f},"
+              f"{r.get('publishes', 0)},{r.get('hot_swaps', 0)},"
+              f"{r.get('promotions', 0)}")
+    print(f"serve,ratio,hotswap_vs_static,{out['hotswap_vs_static']:.3f}")
+    print(f"serve,ratio,overflow_vs_static,{out['overflow_vs_static']:.3f}")
+    return out
+
+
 def quant_scenario(model, params, one, prompt, *, steps, max_len):
     """fp vs int8 vs int4 frozen base on the compiled adapter1 path.
 
@@ -425,6 +530,7 @@ def main(steps: int = STEPS, ci: bool = False):
     results["quant"] = quant_scenario(model, params, one, prompt,
                                       steps=steps, max_len=max_len)
     results["scheduled_poisson"] = poisson_scenario(model, params, bank)
+    results["lifecycle"] = lifecycle_scenario(model, params, bank, sets)
 
     os.makedirs(OUT, exist_ok=True)
     for path in (os.path.join(OUT, "bench_serve.json"),
@@ -451,12 +557,18 @@ def main(steps: int = STEPS, ci: bool = False):
             f"int8 decode regressed vs fp: {q8:.2f}x < "
             f"{CI_FLOOR_INT8_DECODE_VS_FP}x (is the reference-tier dequant "
             "still hoisted out of the decode scan?)")
+        hs = results["lifecycle"]["hotswap_vs_static"]
+        assert hs >= CI_FLOOR_HOTSWAP_VS_STATIC, (
+            f"hot-swap-under-load regressed: {hs:.3f}x < "
+            f"{CI_FLOOR_HOTSWAP_VS_STATIC}x of static-bank throughput "
+            "(is the slot swap still recompile-free?)")
         print(f"# CI floors hold: bank8_vs_adapter1={rel:.3f} "
               f">= {CI_FLOOR_BANK_VS_ADAPTER}, compiled_vs_hostloop(bank8)="
               f"{spd:.2f}x >= {CI_FLOOR_COMPILED_VS_HOSTLOOP}x, "
               f"p99 static/scheduled={tail:.2f}x >= "
               f"{CI_FLOOR_STATIC_P99_OVER_SCHED}x, int8 decode {q8:.2f}x "
-              f">= {CI_FLOOR_INT8_DECODE_VS_FP}x fp")
+              f">= {CI_FLOOR_INT8_DECODE_VS_FP}x fp, hotswap {hs:.3f}x "
+              f">= {CI_FLOOR_HOTSWAP_VS_STATIC}x static")
     return results
 
 

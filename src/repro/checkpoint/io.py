@@ -178,3 +178,23 @@ def load_adapter_state(path: str, *, lora_cfg=None, n_clients: int = None):
                             rank_mask=None if mask is None
                             else jnp.asarray(mask, jnp.float32),
                             rank=r_pad, alpha=lora_cfg.alpha)
+
+
+def publish_adapter_state(path: str, live, *, lora_cfg=None, clients=None):
+    """Stream a federated checkpoint's adapters into a live serving bank —
+    the round-boundary handoff: the trainer saves, the server publishes,
+    traffic keeps flowing.
+
+    ``live`` is a :class:`~repro.core.lora.LiveAdapterBank`.  Every client
+    in the checkpoint (or just ``clients``) is published under its client
+    index as the tenant id; resident tenants hot-swap on device, the rest
+    update the host store.  Returns ``(base_params, n_published)`` so the
+    caller can verify the base still matches what it is serving."""
+    base, aset = load_adapter_state(path, lora_cfg=lora_cfg)
+    n_clients = jax.tree.leaves(aset.lora)[0].shape[0]
+    clients = range(n_clients) if clients is None else clients
+    n = 0
+    for c in clients:
+        live.publish(int(c), aset.client(int(c)))
+        n += 1
+    return base, n

@@ -490,6 +490,22 @@ class FederatedTrainer:
         (gamma_i = scaling(alpha, r_i, N) under heterogeneous ranks)."""
         return self.gammas[client]
 
+    def publish_adapters(self, live, clients=None) -> int:
+        """Push the current round's adapters into a live serving bank.
+
+        ``live`` is a :class:`~repro.core.lora.LiveAdapterBank`; each
+        client's personalized AdapterSet (own gamma_i folded in, rank-mask
+        row applied) is published under its client index as the tenant id.
+        Resident tenants hot-swap on device between decode chunks with zero
+        recompiles; the rest land in the host store.  Returns the number of
+        tenants published."""
+        clients = range(self.fed_cfg.num_clients) if clients is None else clients
+        n = 0
+        for c in clients:
+            live.publish(int(c), self.client_adapters(int(c)))
+            n += 1
+        return n
+
     def eval_perplexity(self, batch: int = 16, client: int = 0) -> float:
         """Held-out perplexity using client ``client``'s personalized model."""
         toks = jnp.asarray(self.dataset.eval_batch(batch))

@@ -21,6 +21,8 @@ decode step.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from typing import Any, Tuple
 
 import jax
@@ -488,6 +490,16 @@ def init_adapter_set(params, key, lora_cfg, *, n_clients: int = 1,
         lora=init_lora(params, key, lora_cfg, targets=targets))
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _bank_slot_swap(lora, new, slot):
+    """One stacked-bank slot replaced on device: the bank leaves are DONATED,
+    so on backends that support donation the update happens in the bank's own
+    buffers — no second copy of a fleet-sized bank ever exists.  ``slot`` is
+    traced, so every slot of a given bank shape shares ONE executable."""
+    return jax.tree.map(lambda L, x: L.at[slot].set(x.astype(L.dtype)),
+                        lora, new)
+
+
 @dataclasses.dataclass(frozen=True)
 class AdapterBank:
     """K prepared adapter sets stacked for multi-tenant serving.
@@ -498,14 +510,25 @@ class AdapterBank:
     ``bank.gather(ids)`` (ids traced — one executable serves every tenant
     mix) and routes them through the batched adapter path in
     ``kernels/dispatch``.
+
+    ``version`` counts slot publishes (:meth:`publish`) — host-side
+    bookkeeping for the adapter lifecycle, deliberately NOT part of the
+    pytree (neither child nor treedef aux): a version bump must never change
+    the jit cache key, or every publish would recompile the serving engines.
+    It therefore does not survive a flatten/unflatten round trip.
     """
     lora: Any                                 # leaves (K,) + leaf shape
     rank_mask: Any = None                     # (K, r_max) or None
     ranks: Tuple[int, ...] = ()               # per-tenant active ranks
+    version: int = 0                          # publish counter (host-only)
 
     @property
     def size(self) -> int:
         return jax.tree.leaves(self.lora)[0].shape[0]
+
+    @property
+    def r_max(self) -> int:
+        return adapter_rank(self.lora)
 
     @classmethod
     def from_sets(cls, sets) -> "AdapterBank":
@@ -533,6 +556,67 @@ class AdapterBank:
                 ranks = (r_pad,) * n
         return cls(lora=prepared.lora, rank_mask=rank_mask(ranks, r_pad),
                    ranks=tuple(int(r) for r in ranks))
+
+    def publish(self, slot: int, aset: AdapterSet, *,
+                donate: bool = True) -> "AdapterBank":
+        """Atomically replace tenant ``slot`` with ``aset`` — the versioned
+        bank update that lets federated rounds re-publish adapters while
+        serving continues.
+
+        The new set is prepared (rank-masked, gamma folded into B) and
+        zero-padded to the bank's ``r_max``, so the stacked leaves keep
+        EXACTLY their shapes and dtypes: every executable compiled against
+        the bank (decode chunks, admission prefills, the fixed engine) stays
+        valid — swapping a slot triggers zero recompiles (asserted in
+        tests/test_lifecycle.py).  A set whose rank exceeds ``r_max`` is
+        rejected rather than silently reshaping the bank.
+
+        With ``donate=True`` (default) the old leaves are donated to the
+        update: the returned bank REPLACES ``self``, whose buffers may be
+        invalidated — drop the old reference.  Pass ``donate=False`` to keep
+        the old bank readable (e.g. A/B comparison in tests).
+        """
+        if not 0 <= int(slot) < self.size:
+            raise ValueError(f"slot {slot} out of range for a bank of "
+                             f"{self.size} tenants")
+        slot = int(slot)
+        prepared = aset.prepared()
+        r = adapter_rank(prepared.lora)
+        r_max = self.r_max
+        if r > r_max:
+            raise ValueError(
+                f"published rank {r} exceeds the bank's r_max={r_max}: "
+                "slot shapes are padded-stable by construction — rebuild "
+                "the bank (AdapterBank.from_sets) to grow the rank ceiling")
+        padded = pad_rank_tree(prepared.lora, r_max)
+        bank_leaves, bank_def = jax.tree.flatten(self.lora)
+        new_leaves, new_def = jax.tree.flatten(padded)
+        if bank_def != new_def:
+            raise ValueError(
+                "published adapter tree structure does not match the "
+                f"bank's: {new_def} vs {bank_def}")
+        for bl, nl in zip(bank_leaves, new_leaves):
+            if bl.shape[1:] != nl.shape:
+                raise ValueError(
+                    f"published adapter leaf shape {nl.shape} does not "
+                    f"match the bank slot shape {bl.shape[1:]}")
+        if donate:
+            with warnings.catch_warnings():
+                # XLA CPU cannot honor donation and warns; the swap is still
+                # correct there (one extra copy), and real accelerators
+                # donate in place
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                lora = _bank_slot_swap(self.lora, padded,
+                                       jnp.asarray(slot, jnp.int32))
+        else:
+            lora = jax.tree.map(
+                lambda L, x: L.at[slot].set(x.astype(L.dtype)),
+                self.lora, padded)
+        ranks = list(self.ranks or (r_max,) * self.size)
+        ranks[slot] = r
+        return AdapterBank(lora=lora, rank_mask=rank_mask(tuple(ranks), r_max),
+                           ranks=tuple(ranks), version=self.version + 1)
 
     def gather(self, ids) -> AdapterSet:
         """Per-request adapters, MATERIALIZED: ``ids`` (b,) int tenant
@@ -574,6 +658,211 @@ jax.tree_util.register_pytree_node(
     AdapterBank,
     lambda b: ((b.lora, b.rank_mask), (b.ranks,)),
     lambda aux, ch: AdapterBank(lora=ch[0], rank_mask=ch[1], ranks=aux[0]))
+
+
+class LiveAdapterBank:
+    """Adapter lifecycle at fleet scale: an HBM-resident hot set over a
+    host-RAM tenant store.
+
+    The device :class:`AdapterBank` holds ``hot_slots`` padded slots; the
+    full tenant population lives host-side as numpy trees (prepared —
+    gamma-folded, rank-masked — and zero-padded to ``r_max``, so promotion
+    is a pure copy).  This serves a bank that does NOT fit in HBM: a
+    request for a non-resident tenant promotes it into the least-recently-
+    used unpinned slot at the next chunk boundary; the evictee is demoted
+    to the host store for free, because the store is always authoritative
+    (:meth:`publish` writes host first, then swaps the device slot only if
+    the tenant is resident).
+
+    This object is intentionally NOT a pytree: it is host-side lifecycle
+    state (residency map, LRU clock, versions).  Compiled code only ever
+    sees ``live.bank`` — a plain AdapterBank whose shapes never change, so
+    promotions, demotions, and publishes all reuse the same executables.
+
+    Recency is driven by the request ids flowing through
+    ``launch/serve.serve_scheduled`` (admission + every decode chunk calls
+    :meth:`touch` / :meth:`acquire`), which is why stale tenant ids on idle
+    engine slots are a correctness hazard there — see the ids_arr reset in
+    ``serve_scheduled``'s eviction path.
+    """
+
+    def __init__(self, *, bank: AdapterBank, store: dict, slot_tenant):
+        self.bank = bank
+        self.store = store                    # tenant -> {lora, rank, version}
+        self.slot_tenant = [int(t) for t in slot_tenant]
+        if len(self.slot_tenant) != bank.size:
+            raise ValueError("slot_tenant must name every device slot")
+        self.tenant_slot = {t: s for s, t in enumerate(self.slot_tenant)
+                            if t >= 0}
+        self._tick = 0
+        self._last_used = [0] * len(self.slot_tenant)
+        self.version = 0                      # global publish counter
+        self.promotions = 0
+        self.demotions = 0
+        self.swaps = 0                        # in-place resident publishes
+
+    # ------------------------------------------------------------ properties
+
+    @property
+    def hot_slots(self) -> int:
+        return len(self.slot_tenant)
+
+    @property
+    def r_max(self) -> int:
+        return self.bank.r_max
+
+    @property
+    def tenants(self):
+        return sorted(self.store)
+
+    def has(self, tenant) -> bool:
+        return int(tenant) in self.store
+
+    def resident(self, tenant) -> bool:
+        return int(tenant) in self.tenant_slot
+
+    def tenant_version(self, tenant) -> int:
+        return self.store[int(tenant)]["version"]
+
+    # ---------------------------------------------------------- constructors
+
+    @classmethod
+    def from_sets(cls, sets, *, hot_slots: int,
+                  r_max: int = 0) -> "LiveAdapterBank":
+        """Register tenants 0..len(sets)-1; the first ``hot_slots`` of them
+        start device-resident.  ``r_max`` (default: the max rank seen) is
+        the bank's permanent rank ceiling — later publishes may use any
+        rank up to it."""
+        sets = list(sets)
+        if not sets:
+            raise ValueError("LiveAdapterBank needs at least one tenant")
+        prepared = [s.prepared() for s in sets]
+        ranks = [adapter_rank(p.lora) for p in prepared]
+        r_max = int(r_max) or max(ranks)
+        if max(ranks) > r_max:
+            raise ValueError(f"rank {max(ranks)} exceeds r_max={r_max}")
+        store = {t: {"lora": jax.tree.map(onp.asarray,
+                                          pad_rank_tree(p.lora, r_max)),
+                     "rank": r, "version": 0}
+                 for t, (p, r) in enumerate(zip(prepared, ranks))}
+        return cls._build(store, hot_slots=hot_slots, r_max=r_max)
+
+    @classmethod
+    def from_bank(cls, bank: AdapterBank, *, hot_slots: int
+                  ) -> "LiveAdapterBank":
+        """Wrap a static AdapterBank: every bank row becomes a host-store
+        tenant (row index = tenant id) and the first ``hot_slots`` start
+        resident — ``--hot-slots`` on the serve CLI takes this path."""
+        host = jax.tree.map(onp.asarray, bank.lora)
+        ranks = bank.ranks or (bank.r_max,) * bank.size
+        store = {t: {"lora": jax.tree.map(lambda x, t=t: x[t], host),
+                     "rank": int(ranks[t]), "version": 0}
+                 for t in range(bank.size)}
+        return cls._build(store, hot_slots=hot_slots, r_max=bank.r_max)
+
+    @classmethod
+    def _build(cls, store, *, hot_slots: int, r_max: int) -> "LiveAdapterBank":
+        if hot_slots < 1:
+            raise ValueError(f"need >= 1 hot slot, got {hot_slots}")
+        tenants = sorted(store)
+        resident = tenants[:hot_slots]
+        template = store[tenants[0]]["lora"]
+        rows, slot_tenant, slot_ranks = [], [], []
+        for s in range(hot_slots):
+            if s < len(resident):
+                t = resident[s]
+                rows.append(store[t]["lora"])
+                slot_tenant.append(t)
+                slot_ranks.append(store[t]["rank"])
+            else:                      # spare slot: zeros (inert by padding)
+                rows.append(jax.tree.map(onp.zeros_like, template))
+                slot_tenant.append(-1)
+                slot_ranks.append(r_max)
+        lora = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        bank = AdapterBank(lora=lora,
+                           rank_mask=rank_mask(tuple(slot_ranks), r_max),
+                           ranks=tuple(slot_ranks))
+        return cls(bank=bank, store=store, slot_tenant=slot_tenant)
+
+    # -------------------------------------------------------------- lifecycle
+
+    def publish(self, tenant, aset: AdapterSet) -> int:
+        """Publish a new adapter version for ``tenant`` (new tenants
+        register on first publish).  The host store is updated first —
+        authoritative, so demotion never needs a device->host copy — and a
+        RESIDENT tenant's device slot is hot-swapped atomically via
+        :meth:`AdapterBank.publish` (zero recompiles; in-flight decode
+        chunks finish on the adapters they gathered, the next chunk serves
+        the new version).  Returns the tenant's new version number."""
+        tenant = int(tenant)
+        prepared = aset.prepared()
+        r = adapter_rank(prepared.lora)
+        if r > self.r_max:
+            raise ValueError(
+                f"tenant {tenant}: published rank {r} exceeds the bank's "
+                f"r_max={self.r_max} — shapes are padded-stable; rebuild "
+                "the live bank to grow the rank ceiling")
+        padded = pad_rank_tree(prepared.lora, self.r_max)
+        ver = (self.store[tenant]["version"] + 1 if tenant in self.store
+               else 0)
+        self.store[tenant] = {"lora": jax.tree.map(onp.asarray, padded),
+                              "rank": r, "version": ver}
+        self.version += 1
+        s = self.tenant_slot.get(tenant)
+        if s is not None:
+            self.bank = self.bank.publish(s, AdapterSet(lora=padded))
+            self.swaps += 1
+        return ver
+
+    def touch(self, tenants) -> None:
+        """Advance the LRU clock for every resident tenant in ``tenants`` —
+        called with the ids observed at each admission / decode chunk."""
+        self._tick += 1
+        for t in tenants:
+            s = self.tenant_slot.get(int(t))
+            if s is not None:
+                self._last_used[s] = self._tick
+
+    def acquire(self, tenants, pinned=()):
+        """Device slots for ``tenants``, promoting non-resident ones from
+        the host store into free or least-recently-used slots.  ``pinned``
+        slots (those gathered by still-running requests) are never evicted.
+        Returns {tenant: slot}, or None when the distinct tenants cannot
+        all be made resident without evicting a pinned slot — the caller
+        defers admission to a later chunk boundary (running requests finish
+        and unpin, so deferral always makes progress)."""
+        want = list(dict.fromkeys(int(t) for t in tenants))
+        for t in want:
+            if t not in self.store:
+                raise KeyError(f"unknown tenant {t}: store holds "
+                               f"{self.tenants}")
+        keep = {int(p) for p in pinned}
+        keep |= {self.tenant_slot[t] for t in want if t in self.tenant_slot}
+        missing = [t for t in want if t not in self.tenant_slot]
+        free = [s for s in range(self.hot_slots)
+                if self.slot_tenant[s] < 0 and s not in keep]
+        victims = sorted((s for s in range(self.hot_slots)
+                          if self.slot_tenant[s] >= 0 and s not in keep),
+                         key=lambda s: self._last_used[s])
+        if len(missing) > len(free) + len(victims):
+            return None
+        for t in missing:
+            s = free.pop(0) if free else victims.pop(0)
+            self._promote(t, s)
+        self.touch(want)
+        return {t: self.tenant_slot[t] for t in want}
+
+    def _promote(self, tenant: int, slot: int) -> None:
+        old = self.slot_tenant[slot]
+        if old >= 0:
+            # demotion is free: the host store already holds the evictee
+            del self.tenant_slot[old]
+            self.demotions += 1
+        rec = self.store[tenant]
+        self.bank = self.bank.publish(slot, AdapterSet(lora=rec["lora"]))
+        self.slot_tenant[slot] = tenant
+        self.tenant_slot[tenant] = slot
+        self.promotions += 1
 
 
 def as_adapter_set(adapters):

@@ -225,6 +225,30 @@ def dequantize_tree(params):
         params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
 
 
+def requantize_merged(merged, ref):
+    """Re-pack a merged (fp) tree onto ``ref``'s quantization grid.
+
+    ``merge_lora`` dequantizes packed leaves before folding the adapter in
+    (by design — the merge must happen in fp), which silently loses the
+    quantized footprint.  This walks ``merged`` alongside the original
+    quantized ``ref`` and re-quantizes exactly the leaves that were packed
+    there, with the same bits / group size, so ``--merge --quant`` keeps
+    the claimed memory win.
+    """
+    def walk(m, r):
+        if isinstance(r, QuantizedLinear):
+            if isinstance(m, QuantizedLinear):
+                return m          # not dequantized by the merge (no adapter)
+            return quantize(m, r.bits, r.group_size or DEFAULT_GROUP)
+        if isinstance(r, dict):
+            return {key: walk(m[key], v) for key, v in r.items()}
+        if isinstance(r, (list, tuple)):
+            return type(r)(walk(mv, rv) for mv, rv in zip(m, r))
+        return m
+
+    return walk(merged, ref)
+
+
 def has_quantized(params) -> bool:
     return any(isinstance(leaf, QuantizedLinear)
                for leaf in jax.tree.leaves(

@@ -41,9 +41,10 @@ import numpy as np
 from repro.checkpoint.io import load_adapter_state
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LoRAConfig
-from repro.core.lora import AdapterBank, AdapterSet, init_adapter_set
+from repro.core.lora import (AdapterBank, AdapterSet, LiveAdapterBank,
+                             init_adapter_set)
 from repro.core.quant import (apply_quant_flag, dequantize_tree,
-                              has_quantized)
+                              has_quantized, requantize_merged)
 from repro.kernels import dispatch
 from repro.models.api import build_model
 from repro.models.transformer import (merge_paged_cache, paged_prefill_view,
@@ -212,6 +213,23 @@ def generate(model, params, prompt, steps: int, max_len: int, adapters=None,
                max_len=int(max_len), temperature=float(temperature))
 
 
+def _check_adapter_ids(adapter_ids, size: int, *, what: str = "adapter_id"):
+    """Host-boundary validation of request->tenant ids against a bank of
+    ``size`` tenants.  Inside jit, JAX gather semantics silently CLAMP an
+    out-of-range index, so a bad id would be served the LAST tenant's
+    adapter with no error — catch it here instead.  Traced ids (a caller
+    composing inside its own jit) pass through unchecked."""
+    if isinstance(adapter_ids, jax.core.Tracer):
+        return
+    ids = np.asarray(adapter_ids)
+    bad = np.argwhere((ids < 0) | (ids >= size)).reshape(-1)
+    if bad.size:
+        raise ValueError(
+            f"{what} out of range for a bank of {size} tenants (JAX gather "
+            f"would silently clamp to the last tenant): rows "
+            f"{bad.tolist()} hold ids {ids.reshape(-1)[bad].tolist()}")
+
+
 def generate_banked(model, params, bank: AdapterBank, adapter_ids, prompt,
                     steps: int, max_len: int, *, temperature: float = 0.0,
                     key=None):
@@ -219,6 +237,7 @@ def generate_banked(model, params, bank: AdapterBank, adapter_ids, prompt,
     adapter ``adapter_ids[i]``.  The ids are traced, so one executable
     covers every tenant mix; the bank leaves stay stacked and each
     projection (or the BGMV kernel) gathers its own request rows."""
+    _check_adapter_ids(adapter_ids, bank.size)
     return generate(model, params, prompt, steps, max_len,
                     adapters=bank.requests(adapter_ids),
                     temperature=temperature, key=key)
@@ -254,6 +273,7 @@ def generate_hostloop(model, params, prompt, steps: int, max_len: int,
 def generate_banked_hostloop(model, params, bank: AdapterBank, adapter_ids,
                              prompt, steps: int, max_len: int):
     """Host-loop oracle for the bank path (materialized per-step gather)."""
+    _check_adapter_ids(adapter_ids, bank.size)
     b, p = prompt.shape
     vocab = model.cfg.vocab_size
     cache = model.init_cache(b, max_len)
@@ -349,9 +369,13 @@ class BlockPool:
 class Request:
     """One generation request for the scheduler.  ``steps`` counts generated
     tokens (prompt excluded), matching `generate`; ``arrival`` is seconds
-    from scheduler start.  The scheduler fills the bookkeeping fields:
-    ``tokens`` (the generated ids, first token included), ``t_first`` /
-    ``t_done`` (completion-relative timestamps for latency metrics)."""
+    from scheduler start.  ``adapter_id`` is the TENANT identity — a row of
+    a static AdapterBank, or a store tenant of a LiveAdapterBank (which may
+    live in host RAM until this request promotes it); it is validated at
+    the host boundary, never clamped.  The scheduler fills the bookkeeping
+    fields: ``tokens`` (the generated ids, first token included),
+    ``t_first`` / ``t_done`` (completion-relative timestamps for latency
+    metrics)."""
     rid: int
     prompt: np.ndarray
     steps: int
@@ -419,7 +443,8 @@ def _jit_paged_chunk(model):
 
 
 def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
-                    block_size=8, chunk=8, max_len=None, wait=True):
+                    block_size=8, chunk=8, max_len=None, wait=True,
+                    on_boundary=None):
     """Continuous-batching serve loop: admit / decode-chunk / evict until
     every request completes.  Returns the requests (mutated in place —
     ``tokens``, ``t_first``, ``t_done`` filled) sorted by rid.
@@ -427,14 +452,33 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
     ``requests``: Request list; arrivals are seconds from loop start and
     are honored against the wall clock (``wait=False`` treats every
     request as already arrived — deterministic tests).  ``bank``: optional
-    AdapterBank; each request's ``adapter_id`` names its tenant.
+    AdapterBank (each request's ``adapter_id`` indexes a bank row) or
+    :class:`~repro.core.lora.LiveAdapterBank` (``adapter_id`` names a
+    store tenant; non-resident tenants are LRU-promoted into hot slots at
+    admission, slots gathered by running requests stay pinned, and
+    publishes land between chunks with zero recompiles).
     ``max_len`` bounds prompt+steps per request and sizes the per-request
     block count; the pool holds exactly ``max_batch`` requests' worth of
     blocks plus the null block, so admission can never deadlock behind
-    block starvation with a free slot."""
+    block starvation with a free slot.
+
+    ``on_boundary(i)``: optional hook called at every scheduler boundary
+    (before admission, between decode chunks) with a running boundary
+    index — the adapter-lifecycle swap window: publishing into a live bank
+    here is atomic with respect to decode chunks (the chunk already
+    dispatched gathered the old slots; the next gathers the new)."""
     reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
     if not reqs:
         return []
+    live = bank if isinstance(bank, LiveAdapterBank) else None
+    if bank is not None and live is None:
+        # host-boundary id validation: an out-of-range id would be silently
+        # clamp-gathered to the LAST tenant's adapter.  A live bank's store
+        # may legitimately grow mid-run (a publish from on_boundary), so
+        # its tenants are checked at admission time instead.
+        for r in reqs:
+            _check_adapter_ids([r.adapter_id], bank.size,
+                               what=f"request rid={r.rid}: adapter_id")
     need = max(len(r.prompt) + r.steps for r in reqs)
     max_len = max_len or need
     win = model.cfg.attn_window
@@ -463,6 +507,8 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
              else (lambda: float("inf")))
     pending, running = list(reqs), []
 
+    cur_bank = (lambda: live.bank) if live is not None else (lambda: bank)
+
     def finish(r, now):
         r.t_done = now
         running.remove(r)
@@ -472,8 +518,18 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
         nonlocal active, table
         active = active.at[r.slot].set(False)
         table = table.at[r.slot].set(0)         # back to the null block
+        # reset the slot's tenant id: a stale id would keep being gathered
+        # for the idle slot every chunk (harmless to outputs — the slot is
+        # inactive — but it corrupts LRU/residency accounting, which keys
+        # promotion and slot pinning on the observed ids)
+        ids_arr[r.slot] = 0
 
+    boundary = 0
     while pending or running:
+        if on_boundary is not None:
+            # the swap window: between decode chunks / admission groups
+            on_boundary(boundary)
+        boundary += 1
         now = clock()
         # ---- admission: FIFO same-length groups into free slots.  The
         # head of the queue is never overtaken (a shorter-prompt request
@@ -489,23 +545,43 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
                     group.append(r)
                 else:
                     break
+            slot_map = None
+            if group and live is not None:
+                for r in group:
+                    if not live.has(r.adapter_id):
+                        raise ValueError(
+                            f"request rid={r.rid}: unknown tenant "
+                            f"{r.adapter_id} (store holds {live.tenants})")
+                # hot slots gathered by running requests are pinned; shrink
+                # the group from the tail (head keeps FIFO priority) until
+                # its distinct tenants fit the unpinned hot set, deferring
+                # admission entirely when even the head cannot be promoted
+                pinned = {int(ids_arr[r.slot]) for r in running}
+                while group:
+                    slot_map = live.acquire(
+                        [r.adapter_id for r in group], pinned)
+                    if slot_map is not None:
+                        break
+                    group.pop()
             if not group:
                 break
             for r in group:
                 pending.remove(r)
             slots = [free_slots.pop(0) for _ in group]
             rows = np.zeros((len(group), mb), np.int32)
+            gather_ids = np.zeros((len(group),), np.int32)
             for i, (r, s) in enumerate(zip(group, slots)):
                 r.slot, r.blocks = s, pool.alloc(mb)
                 rows[i] = r.blocks
-                ids_arr[s] = r.adapter_id
+                gather_ids[i] = (slot_map[int(r.adapter_id)]
+                                 if live is not None else r.adapter_id)
+                ids_arr[s] = gather_ids[i]
             sl = jnp.asarray(slots, jnp.int32)
             table = table.at[sl].set(jnp.asarray(rows))
             prompts = jnp.asarray(np.stack([r.prompt for r in group]),
                                   jnp.int32)
-            adapters = (bank.requests(jnp.asarray(
-                [r.adapter_id for r in group], jnp.int32))
-                if bank is not None else None)
+            adapters = (cur_bank().requests(jnp.asarray(gather_ids))
+                        if bank is not None else None)
             _count_dispatch()
             cache, first = admit(params, cache, prompts, jnp.asarray(rows),
                                  sl, jnp.asarray(rows.reshape(-1)), adapters)
@@ -523,7 +599,10 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
 
         # ---- decode chunk + eviction
         if running:
-            adapters = (bank.requests(jnp.asarray(ids_arr))
+            if live is not None:
+                # recency driven by the ids flowing through the scheduler
+                live.touch([r.adapter_id for r in running])
+            adapters = (cur_bank().requests(jnp.asarray(ids_arr))
                         if bank is not None else None)
             _count_dispatch()
             cache, tok, pos, toks = chunk_run(params, cache, tok, pos,
@@ -559,13 +638,20 @@ def make_requests(trace, *, prompt_len, steps, tenants, vocab, seed=0):
     else:
         with open(trace) as f:
             recs = json.load(f)
-    return [Request(rid=i,
+    reqs = [Request(rid=i,
                     prompt=rng.integers(0, vocab, prompt_len).astype(
                         np.int32),
                     steps=int(rec.get("steps", steps)),
                     adapter_id=int(rec.get("adapter", i % max(tenants, 1))),
                     arrival=float(rec.get("arrival", 0.0)))
             for i, rec in enumerate(recs)]
+    for r in reqs:   # a bad trace record must fail here, not serve tenant N-1
+        if not 0 <= r.adapter_id < tenants:
+            raise ValueError(
+                f"request rid={r.rid}: adapter {r.adapter_id} out of range "
+                f"for {tenants} tenants (trace record names a tenant the "
+                "bank does not hold)")
+    return reqs
 
 
 # ------------------------------------------------------------------ CLI
@@ -639,6 +725,11 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=8,
                     help="decode steps per scheduler chunk (admission / "
                          "eviction happen at chunk boundaries)")
+    ap.add_argument("--hot-slots", type=int, default=0,
+                    help="serve the bank through a LiveAdapterBank with "
+                         "this many device-resident slots; the remaining "
+                         "tenants overflow to host RAM and are LRU-promoted "
+                         "on demand (0 = whole bank on device, no overflow)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -658,11 +749,15 @@ def main(argv=None):
         reqs = make_requests(args.arrival_trace, prompt_len=4,
                              steps=args.steps, tenants=bank.size,
                              vocab=cfg.vocab_size)
-        t0 = time.time()
-        done = serve_scheduled(model, base, reqs, bank=bank,
+        serve_bank = bank
+        if args.hot_slots:
+            serve_bank = LiveAdapterBank.from_bank(bank,
+                                                   hot_slots=args.hot_slots)
+        t0 = time.monotonic()
+        done = serve_scheduled(model, base, reqs, bank=serve_bank,
                                max_batch=args.max_batch,
                                block_size=args.block_size, chunk=args.chunk)
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         lats = sorted(r.t_done - r.arrival for r in done
                       if r.t_done is not None)
         p50 = lats[len(lats) // 2] if lats else 0.0
@@ -673,17 +768,26 @@ def main(argv=None):
               f"block={args.block_size} chunk={args.chunk}  "
               f"p50={p50*1000:.0f}ms p99={p99*1000:.0f}ms "
               f"goodput={toks/dt:.1f} tok/s")
+        if args.hot_slots:
+            print(f"# live bank: {serve_bank.hot_slots}/{len(serve_bank.tenants)} "
+                  f"slots hot, {serve_bank.promotions} promotions, "
+                  f"{serve_bank.demotions} demotions")
         return done
 
     if args.merge is not None:
         merged = bank.adapter(args.merge).merge(base)
+        if has_quantized(base):
+            # merge_lora dequantizes packed leaves to fold the adapter in;
+            # re-pack onto the checkpoint's grid or --merge --quant would
+            # silently serve fp weights and lose the whole footprint win
+            merged = requantize_merged(merged, base)
         seq = generate(model, merged, prompt, args.steps, max_len,
                        temperature=args.temperature)  # warm-up + compile
-        t0 = time.time()
+        t0 = time.monotonic()
         seq = jax.block_until_ready(
             generate(model, merged, prompt, args.steps, max_len,
                      temperature=args.temperature))
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         print(f"# {args.arch} merged tenant {args.merge}: "
               f"batch={args.batch} steps={args.steps}  "
               f"{dt*1000/args.steps:.1f} ms/token (compiled engine)")
@@ -693,11 +797,11 @@ def main(argv=None):
     ids = jnp.arange(args.batch) % bank.size
     seq = generate_banked(model, base, bank, ids, prompt, args.steps,
                           max_len, temperature=args.temperature)
-    t0 = time.time()
+    t0 = time.monotonic()
     seq = jax.block_until_ready(
         generate_banked(model, base, bank, ids, prompt, args.steps, max_len,
                         temperature=args.temperature))
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"# {args.arch} banked decode: {bank.size} tenants "
           f"(ranks {','.join(str(r) for r in bank.ranks)}), "
           f"batch={args.batch} steps={args.steps}  "

@@ -111,6 +111,36 @@ def test_block_pool_rejects_degenerate():
         serve.BlockPool(1)        # no room for the null block + any request
 
 
+def test_block_pool_double_free_names_blocks():
+    """The double-free error must NAME the offending blocks — the message
+    is what a scheduler bug report hangs on."""
+    pool = serve.BlockPool(8)
+    got = pool.alloc(3)
+    pool.free(got)
+    with pytest.raises(ValueError) as ei:
+        pool.free(got)
+    msg = str(ei.value)
+    assert "double free" in msg
+    for b in got:
+        assert str(b) in msg
+    # a mixed batch reports exactly the not-held blocks
+    held = pool.alloc(2)
+    with pytest.raises(ValueError) as ei:
+        pool.free(held + [got[0]])
+    assert str(got[0]) in str(ei.value)
+    assert pool.available == 5          # failed free released nothing
+
+
+def test_block_pool_duplicate_in_one_call_raises():
+    pool = serve.BlockPool(8)
+    b = pool.alloc(1)[0]
+    before = pool.available
+    with pytest.raises(ValueError):
+        pool.free([b, b])
+    assert pool.available == before     # refused atomically
+    pool.free([b])                      # the block is still cleanly held
+
+
 # ------------------------------------------------- ring vs paged layout parity
 
 def _check_ring_paged_layout(seed, batch, size, bs, s):
@@ -316,6 +346,28 @@ def test_scheduled_mixed_lengths_and_steps_complete():
         assert [len(r.tokens) for r in done] == steps_list
         out.append([r.tokens for r in done])
     assert out[0] == out[1]
+
+
+def test_scheduled_immediate_finish_latency_sane():
+    """steps=1 requests finish AT admission (their only token comes from
+    the prefill); under wait=True their t_done is taken from t_first, so
+    both timestamps must exist, be monotone w.r.t. arrival, and yield
+    non-negative latency — the metrics serve_bench aggregates."""
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = np.asarray(jax.random.randint(jax.random.key(5), (3, 4), 0,
+                                           cfg.vocab_size), np.int32)
+    reqs = [serve.Request(rid=i, prompt=prompt[i], steps=s, arrival=0.0)
+            for i, s in enumerate((1, 1, 4))]
+    done = serve.serve_scheduled(model, params, reqs, max_batch=3,
+                                 block_size=4, chunk=2, wait=True)
+    for r in done:
+        assert r.t_first is not None and r.t_done is not None
+        assert r.t_done >= r.t_first >= 0.0
+        assert len(r.tokens) == r.steps
+    for r in done[:2]:                  # immediate finishers: one timestamp
+        assert r.t_done == r.t_first
 
 
 def test_scheduled_block_starvation_waits_not_fails():

@@ -27,7 +27,8 @@ from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
 from repro.core.federated import FederatedTrainer
 from repro.core.quant import (QuantizedLinear, apply_quant_flag, dequantize,
                               dequantize_tree, quant_footprint, quantize,
-                              quantize_tree, tree_quant_mode)
+                              quantize_tree, requantize_merged,
+                              tree_quant_mode)
 from repro.data.synthetic import FederatedDataset
 from repro.kernels import dispatch, ref
 from repro.kernels.bgmv import (bgmv_gemv, bgmv_gemv_quant, bgmv_matmul,
@@ -267,6 +268,58 @@ def test_apply_quant_flag():
         apply_quant_flag(q, "none")                  # packed, fp requested
     with pytest.raises(ValueError, match="int8"):
         apply_quant_flag(q, "int4")                  # packed, other mode
+
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_requantize_merged_roundtrip(mode):
+    """--merge on a quantized base: merge_lora dequantizes packed leaves to
+    fold the adapter in (by design), and requantize_merged must re-pack the
+    result onto the checkpoint's grid — same mode, same group size, same
+    footprint, logits within the quant error bound of the fp merge."""
+    import dataclasses
+    from repro.core.lora import AdapterBank, init_adapter_set
+    model, params = _small_model()
+    qt = quantize_tree(params, mode)
+    aset = init_adapter_set(params, jax.random.key(3),
+                            LoRAConfig(rank=4, alpha=8.0,
+                                       targets=model.cfg.lora_targets))
+    # B is zero-init: perturb so the merge actually moves the weights
+    aset = dataclasses.replace(aset, lora=jax.tree.map(
+        lambda x: x + 0.03 * jax.random.normal(jax.random.key(9), x.shape),
+        aset.lora))
+    bank = AdapterBank.from_sets([aset])
+    def n_packed(tree):
+        return sum(isinstance(l, QuantizedLinear) for l in jax.tree.leaves(
+            tree, is_leaf=lambda l: isinstance(l, QuantizedLinear)))
+
+    merged_fp = bank.adapter(0).merge(qt)
+    # merge_lora dequantized the LoRA-targeted leaves (non-targets stay
+    # packed) — the footprint regression --merge --quant used to ship
+    assert 0 < n_packed(merged_fp) < n_packed(qt)
+    back = requantize_merged(merged_fp, qt)
+    assert n_packed(back) == n_packed(qt)
+    # the repack restores mode, structure, and byte footprint exactly
+    assert tree_quant_mode(back) == mode
+    assert jax.tree.structure(back) == jax.tree.structure(qt)
+    assert quant_footprint(back)["base_bytes"] == \
+        quant_footprint(qt)["base_bytes"]
+    for bl, ql in zip(
+            jax.tree.leaves(back, is_leaf=lambda l: isinstance(
+                l, QuantizedLinear)),
+            jax.tree.leaves(qt, is_leaf=lambda l: isinstance(
+                l, QuantizedLinear))):
+        if isinstance(ql, QuantizedLinear):
+            assert isinstance(bl, QuantizedLinear)
+            assert (bl.bits, bl.group_size) == (ql.bits, ql.group_size)
+    # unmerged leaves (embed, norms) pass through untouched
+    np.testing.assert_array_equal(np.asarray(back["embed"]),
+                                  np.asarray(merged_fp["embed"]))
+    # serving the repacked merge stays within the quant error bound
+    toks = jax.random.randint(jax.random.key(4), (2, 16), 0, 64)
+    fp_logits = model.forward(merged_fp, {"tokens": toks})[0]
+    q_logits = model.forward(back, {"tokens": toks})[0]
+    err = float(jnp.abs(q_logits - fp_logits).max())
+    assert 0.0 < err < LOGIT_MAX[mode], f"{mode} merged logit error {err:.3f}"
 
 
 # ------------------------------------------- (d) model-level conformance
