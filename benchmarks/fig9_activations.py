@@ -10,7 +10,7 @@ import numpy as np
 
 from benchmarks.common import pretrained_base, run_method
 from repro.core.scaling import predicted_moment_scale, scaling_factor
-from repro.core.stability import aggregated_moment_sweep
+from repro.core.stability import activation_moments, aggregated_moment_sweep
 
 
 def main(rounds: int = 10, emit=print):
@@ -32,9 +32,7 @@ def main(rounds: int = 10, emit=print):
         for rank in (32, 512):
             tr = run_method(method, rank=rank, rounds=rounds, model=model,
                             base=base)
-            from repro.core.stability import activation_moments
-            import jax as _jax
-            toks = _jax.numpy.asarray(tr.dataset.eval_batch(8))
+            toks = np.asarray(tr.dataset.eval_batch(8))
             st = activation_moments(model, tr.base, {"tokens": toks},
                                     tr.client_adapters(0))
             out[(method, rank)] = st

@@ -19,6 +19,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizers import RecompileGuard
 from repro.core.quant import dequantize, quantize
 from repro.kernels import ref
 from repro.kernels.bgmv import (bgmv_gemv, bgmv_gemv_quant, bgmv_matmul,
@@ -69,12 +70,16 @@ def main(emit=print):
     # scales and dequantize in VMEM; the reference tier dequantizes the
     # whole weight up front (the parity-bounds policy).  The derived field
     # records the base-weight bytes each path moves from HBM.
+    # one jitted dequant-reference shared by both widths: the packed tree is
+    # a pytree argument, so int8/int4 land as two cache entries of a single
+    # wrapper (an inline jit per loop iteration would rebuild the cache)
+    dequant_ref = jax.jit(lambda x_, a_, b_, q_: ref.lora_matmul_ref(
+        x_, dequantize(q_), a_, b_, 2.0))
     for bits, mode in ((8, "int8"), (4, "int4")):
         q = quantize(w, bits=bits)
         wbytes = q.nbytes
         add(f"lora_matmul_{mode}_ref_dequant",
-            jax.jit(lambda x_, a_, b_, q=q: ref.lora_matmul_ref(
-                x_, dequantize(q), a_, b_, 2.0)), (x, a, b),
+            lambda x_, a_, b_, q=q: dequant_ref(x_, a_, b_, q), (x, a, b),
             lambda us, f=flops: f"gflops={f/us/1e3:.2f}")
         add(f"lora_matmul_{mode}_pallas_interp",
             lambda x_, a_, b_, q=q, bits=bits: lora_matmul_quant_vjp(
@@ -183,12 +188,20 @@ def main(emit=print):
     for _, fn, args, _ in rows:
         jax.block_until_ready(fn(*args))
 
+    # recompile sanitizer: each row's executable cache is snapshotted after
+    # the warm pass; growth during the timed loop means a shape was
+    # compiling on the clock — fail loudly instead of reporting it as slow
+    guard = RecompileGuard()
+    for name, fn, _, _ in rows:
+        guard.watch(name, fn)
+
     emit("bench,name,us_per_call,derived")
     results = {}
     for name, fn, args, derived in rows:
         us = timeit(fn, *args)
         results[name] = {"us_per_call": round(us, 1)}
         emit(f"kernels,{name},{us:.1f},{derived(us)}")
+    guard.check()
 
     os.makedirs(OUT, exist_ok=True)
     for path in (os.path.join(OUT, "bench_kernels.json"),

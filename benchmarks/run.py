@@ -39,6 +39,12 @@ def _git(*args):
     return proc.stdout if proc.returncode == 0 else None
 
 
+def _warn_row(name, rev, why):
+    """One ``__warning__`` CSV row; commas/newlines sanitized out of *why*."""
+    why = str(why).replace(",", ";").replace("\n", " ")
+    print(f"trajectory,{name},{rev},__warning__,{why}")
+
+
 def trajectory() -> None:
     """Cross-PR trajectory table aggregated from repo-root ``BENCH_*.json``.
 
@@ -50,8 +56,11 @@ def trajectory() -> None:
 
         trajectory,<file>,<rev>,<metric>,<value>
 
-    Revisions that fail to parse (or a missing git repo) are skipped — the
-    working-tree snapshot alone still prints.
+    A historical revision that cannot be read (file renamed since, blob
+    missing) or parsed (malformed snapshot from an old commit) emits a
+    ``__warning__`` row instead of aborting the aggregation — the rest of
+    the trajectory still prints.  A missing git repo degrades to the
+    working-tree snapshot alone.
     """
     print("trajectory,file,rev,metric,value")
     for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
@@ -61,15 +70,19 @@ def trajectory() -> None:
         for rev in revs:
             blob = _git("show", f"{rev}:{name}")
             if blob is None:
+                _warn_row(name, rev, "unreadable: git show failed "
+                                     "(renamed or missing at this revision)")
                 continue
             try:
                 snapshots.append((rev, json.loads(blob)))
-            except ValueError:
+            except ValueError as e:
+                _warn_row(name, rev, f"malformed JSON: {e}")
                 continue
         try:
             with open(path) as f:
                 worktree = json.load(f)
-        except (OSError, ValueError):
+        except (OSError, ValueError) as e:
+            _warn_row(name, "worktree", f"unreadable working-tree file: {e}")
             worktree = None
         if worktree is not None:
             if snapshots and snapshots[-1][1] == worktree:
@@ -77,7 +90,15 @@ def trajectory() -> None:
             else:
                 snapshots.append(("worktree", worktree))
         for rev, snap in snapshots:
-            for metric, value in sorted(_flatten(snap).items()):
+            try:
+                metrics = sorted(_flatten(snap).items())
+            except Exception as e:  # a snapshot no current _flatten handles
+                _warn_row(name, rev, f"unflattenable snapshot: {e}")
+                continue
+            if not metrics:
+                _warn_row(name, rev, "no numeric metrics in snapshot")
+                continue
+            for metric, value in metrics:
                 print(f"trajectory,{name},{rev},{metric},{value:g}")
 
 

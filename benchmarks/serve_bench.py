@@ -88,6 +88,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_config
+from repro.analysis.sanitizers import RecompileGuard
 from repro.configs.base import LoRAConfig
 from repro.core.lora import AdapterBank, LiveAdapterBank, init_adapter_set
 from repro.launch import serve
@@ -154,7 +155,13 @@ def _time_all(timers, *, model, repeats=REPEATS, trials=COMPILE_TRIALS):
     """min seconds per callable across ``trials`` fresh compiles, each timed
     ``repeats`` times INTERLEAVED round-robin so a slow phase of the machine
     penalizes every variant equally instead of whichever happened to be on
-    the clock (compile/warm-up always excluded)."""
+    the clock (compile/warm-up always excluded).
+
+    After each trial's warm pass a RecompileGuard watches every engine the
+    warmup cached on the model: any executable-cache growth during the
+    timed section means an unwarmed shape was compiling inside the
+    measurement (the PR-6/7 bench bug class) — hard error, not a silently
+    slow number."""
     best = {k: float("inf") for k in timers}
     for trial in range(trials):
         if trial:
@@ -162,11 +169,14 @@ def _time_all(timers, *, model, repeats=REPEATS, trials=COMPILE_TRIALS):
             model.__dict__.pop("_serve_jit_cache", None)
         for fn in timers.values():
             jax.block_until_ready(fn())
+        guard = RecompileGuard()
+        guard.watch_model(model)
         for _ in range(repeats):
             for k, fn in timers.items():
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn())
                 best[k] = min(best[k], time.perf_counter() - t0)
+        guard.check()
     return best
 
 
@@ -405,15 +415,17 @@ def quant_scenario(model, params, one, prompt, *, steps, max_len):
     bases = {"fp": params,
              "int8": quantize_tree(params, "int8"),
              "int4": quantize_tree(params, "int4")}
+    # one jitted prefill taking the base as a pytree argument: fp/int8/int4
+    # land as three cache entries of a single wrapper instead of three
+    # fresh jit objects built inside the loop (each with a cold cache)
+    prefill = jax.jit(lambda b, a: model.prefill(
+        b, model.init_cache(BATCH, max_len), prompt, a, last_only=True)[0])
     timers = {}
     for mode, base in bases.items():
-        prefill = jax.jit(lambda a, b=base: model.prefill(
-            b, model.init_cache(BATCH, max_len), prompt, a,
-            last_only=True)[0])
         timers[(mode, "compiled")] = (
             lambda b=base: serve.generate(model, b, prompt, steps, max_len,
                                           one))
-        timers[(mode, "compiled_prefill")] = lambda p=prefill: p(one)
+        timers[(mode, "compiled_prefill")] = lambda b=base: prefill(b, one)
     best = _time_all(timers, model=model)
 
     out = {}

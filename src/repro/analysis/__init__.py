@@ -1,0 +1,54 @@
+"""Trace-safety static analysis + runtime sanitizers for the JAX/Pallas stack.
+
+Two halves:
+
+* ``repro.analysis.lint`` — an AST lint pass with repo-specific rules
+  (R1..R7) codifying the recurring bug classes from CHANGES.md: host RNG
+  inside scan bodies, inline ``jax.jit`` recompiles, non-hashable pytree
+  aux, unguarded host-only code, bare clip-mode gathers on tenant ids,
+  Pallas tiling/VMEM discipline, and shadowed numpy imports.  Run it as
+  ``python -m repro.analysis lint src/``.
+
+* ``repro.analysis.sanitizers`` / ``repro.analysis.stability_check`` —
+  runtime guards: :class:`RecompileGuard` (generalizes the ad-hoc
+  ``_cache_size()`` asserts from the adapter-lifecycle work),
+  ``no_implicit_transfers``/``guard_transfers`` (wraps
+  ``jax.transfer_guard("disallow")`` around compiled engines), and the
+  collapse sentinel that turns the paper's Theorem 4.2 moment-scale
+  prediction (gamma^2 * r / N) into a runnable assertion.
+
+Attribute access is lazy so the *linter* stays importable on hosts
+without jax: only the sanitizer/stability names pull in the runtime deps.
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "Finding": "repro.analysis.lint",
+    "lint_paths": "repro.analysis.lint",
+    "HostOnlyError": "repro.analysis.hostcheck",
+    "check_adapter_ids": "repro.analysis.hostcheck",
+    "host_only": "repro.analysis.hostcheck",
+    "RecompileError": "repro.analysis.sanitizers",
+    "RecompileGuard": "repro.analysis.sanitizers",
+    "TransferGuardError": "repro.analysis.sanitizers",
+    "guard_transfers": "repro.analysis.sanitizers",
+    "no_implicit_transfers": "repro.analysis.sanitizers",
+    "ScalingCollapseError": "repro.analysis.stability_check",
+    "StabilityReport": "repro.analysis.stability_check",
+    "assert_stabilized": "repro.analysis.stability_check",
+    "predicted_scale": "repro.analysis.stability_check",
+    "scaling_flatness": "repro.analysis.stability_check",
+    "stability_report": "repro.analysis.stability_check",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)

@@ -1,0 +1,59 @@
+"""CLI: ``python -m repro.analysis lint [paths...]``.
+
+Exit status 0 iff every finding is either fixed or suppressed by a
+justified pragma — the contract the ``lint-analysis`` CI job enforces.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import RULE_IDS, LintConfig, lint_paths, report
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    lint = sub.add_parser("lint", help="run the trace-safety lint pass")
+    lint.add_argument("paths", nargs="*", default=["src"], help="files or dirs")
+    lint.add_argument(
+        "--vmem-budget-mb",
+        type=float,
+        default=16.0,
+        help="R6 per-kernel VMEM budget in MiB (double-buffered estimate)",
+    )
+    lint.add_argument(
+        "--assume-dim",
+        type=int,
+        default=512,
+        help="R6 stand-in for block dims the constant folder cannot resolve",
+    )
+    lint.add_argument(
+        "--rules",
+        default=",".join(RULE_IDS),
+        help="comma-separated rule subset (default: all)",
+    )
+    lint.add_argument(
+        "--show-suppressed",
+        action="store_true",
+        help="also print pragma-suppressed findings with their justifications",
+    )
+
+    args = parser.parse_args(argv)
+    if args.command == "lint":
+        config = LintConfig(
+            vmem_budget=int(args.vmem_budget_mb * 1024 * 1024),
+            assume_dim=args.assume_dim,
+            rules=tuple(r.strip() for r in args.rules.split(",") if r.strip()),
+        )
+        findings = lint_paths(args.paths or ["src"], config)
+        text, status = report(findings, show_suppressed=args.show_suppressed)
+        print(text)
+        return status
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

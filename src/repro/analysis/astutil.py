@@ -1,0 +1,280 @@
+"""Shared AST plumbing for the lint rules.
+
+Everything here is pure stdlib ``ast`` — the linter must run in CI jobs
+that may not have jax installed, and must never import the modules it
+checks.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+# Call targets that receive a function and trace it (their function-valued
+# arguments run under jit/scan and must obey traced-context rules).
+TRACING_CALLS = {
+    "jax.jit",
+    "jit",
+    "pjit",
+    "jax.pmap",
+    "jax.vmap",
+    "jax.grad",
+    "jax.value_and_grad",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.lax.scan",
+    "lax.scan",
+    "jax.lax.while_loop",
+    "lax.while_loop",
+    "jax.lax.fori_loop",
+    "lax.fori_loop",
+    "jax.lax.cond",
+    "lax.cond",
+    "jax.lax.switch",
+    "lax.switch",
+    "jax.lax.map",
+    "lax.map",
+    "pl.when",
+}
+
+# Decorators that make the decorated def a traced context.
+TRACING_DECORATORS = {
+    "jax.jit",
+    "jit",
+    "jax.pmap",
+    "jax.vmap",
+    "jax.checkpoint",
+    "jax.custom_vjp",
+    "jax.custom_jvp",
+    "pl.when",
+}
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``jax.lax.scan`` for an Attribute/Name chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    name = dotted_name(node.func)
+    if name is not None:
+        return name
+    # functools.partial(jax.jit, ...) used as a decorator or value: report
+    # the partial'd function so decorator matching sees "jax.jit".
+    if isinstance(node.func, ast.Call):
+        inner = dotted_name(node.func.func)
+        if inner in ("functools.partial", "partial") and node.func.args:
+            return dotted_name(node.func.args[0])
+    return None
+
+
+def decorator_names(node: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    names = []
+    for dec in node.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = call_name(dec)
+            if name is None and isinstance(dec.func, ast.Call):
+                name = call_name(dec.func)
+            # functools.partial(jax.jit, donate_argnums=...) as decorator
+            if name in ("functools.partial", "partial") and dec.args:
+                name = dotted_name(dec.args[0])
+        else:
+            name = dotted_name(dec)
+        if name:
+            names.append(name)
+    return names
+
+
+FuncNode = ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+
+
+@dataclass
+class ModuleInfo:
+    """One parsed module plus the derived facts every rule needs."""
+
+    path: str
+    source: str
+    tree: ast.Module
+    parents: dict[ast.AST, ast.AST] = field(default_factory=dict)
+    # alias -> full module name, for module-level imports ("np" -> "numpy")
+    imports: dict[str, str] = field(default_factory=dict)
+    # module-level integer constants, constant-folded ("BN" -> 256)
+    constants: dict[str, int] = field(default_factory=dict)
+    # defs/lambdas that run under trace (jit/scan/grad bodies + closure)
+    traced: set[FuncNode] = field(default_factory=set)
+    # all function defs keyed by name (module + nested; name collisions keep all)
+    defs_by_name: dict[str, list[FuncNode]] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str, source: str) -> "ModuleInfo":
+        tree = ast.parse(source, filename=path)
+        info = cls(path=path, source=source, tree=tree)
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                info.parents[child] = parent
+        info._collect_imports()
+        info._collect_constants()
+        info._collect_defs()
+        info._mark_traced()
+        return info
+
+    # -- derivation passes -------------------------------------------------
+
+    def _collect_imports(self) -> None:
+        for node in self.tree.body:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name.split(".")[0]] = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name] = (
+                        f"{node.module}.{alias.name}"
+                    )
+
+    def _collect_constants(self) -> None:
+        for node in self.tree.body:
+            if not isinstance(node, ast.Assign):
+                continue
+            for target in node.targets:
+                if isinstance(target, ast.Name):
+                    val = self.fold_int(node.value)
+                    if val is not None:
+                        self.constants[target.id] = val
+                elif isinstance(target, ast.Tuple) and isinstance(
+                    node.value, ast.Tuple
+                ):
+                    if len(target.elts) == len(node.value.elts):
+                        for t, v in zip(target.elts, node.value.elts):
+                            if isinstance(t, ast.Name):
+                                folded = self.fold_int(v)
+                                if folded is not None:
+                                    self.constants[t.id] = folded
+
+    def _collect_defs(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs_by_name.setdefault(node.name, []).append(node)
+
+    def _mark_traced(self) -> None:
+        # Pass 1: defs directly traced via decorator or by being handed to a
+        # tracing call (lax.scan body, jax.jit(fn), grad(loss_fn), ...).
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if set(decorator_names(node)) & TRACING_DECORATORS:
+                    self.traced.add(node)
+            elif isinstance(node, ast.Call) and call_name(node) in TRACING_CALLS:
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Lambda):
+                        self.traced.add(arg)
+                    elif isinstance(arg, ast.Name):
+                        for fn in self.defs_by_name.get(arg.id, ()):
+                            self.traced.add(fn)
+                    elif isinstance(arg, ast.Attribute):
+                        for fn in self.defs_by_name.get(arg.attr, ()):
+                            self.traced.add(fn)
+        # Pass 2: close over same-module calls — a def invoked by name from
+        # a traced body is itself traced (one fixpoint loop is enough for
+        # this repo's nesting depth; cap the iterations regardless).
+        for _ in range(8):
+            grew = False
+            for fn in list(self.traced):
+                body = fn.body if isinstance(fn.body, list) else [fn.body]
+                for stmt in body:
+                    for node in ast.walk(stmt):
+                        if isinstance(node, ast.Call):
+                            name = call_name(node)
+                            if name and "." not in name:
+                                for callee in self.defs_by_name.get(name, ()):
+                                    if callee not in self.traced:
+                                        self.traced.add(callee)
+                                        grew = True
+            if not grew:
+                break
+
+    # -- queries -----------------------------------------------------------
+
+    def enclosing_function(self, node: ast.AST) -> FuncNode | None:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def in_traced_context(self, node: ast.AST) -> bool:
+        cur: ast.AST | None = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                if cur in self.traced:
+                    return True
+            cur = self.parents.get(cur)
+        return False
+
+    def in_loop(self, node: ast.AST) -> bool:
+        """Inside a Python for/while body (stopping at function boundaries)."""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.While)):
+                return True
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return False
+            cur = self.parents.get(cur)
+        return False
+
+    def module_alias_of(self, name: str, module: str) -> bool:
+        """True if module-level import binds `name` to `module` (or a submodule)."""
+        target = self.imports.get(name)
+        return target is not None and (
+            target == module or target.startswith(module + ".")
+        )
+
+    def fold_int(self, node: ast.AST, env: dict[str, int] | None = None) -> int | None:
+        """Best-effort constant folding to a Python int (module constants +
+        an optional local env).  Returns None when unresolvable."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value if not isinstance(node.value, bool) else None
+        if isinstance(node, ast.Name):
+            if env and node.id in env:
+                return env[node.id]
+            return self.constants.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            val = self.fold_int(node.operand, env)
+            return -val if val is not None else None
+        if isinstance(node, ast.BinOp):
+            left = self.fold_int(node.left, env)
+            right = self.fold_int(node.right, env)
+            if left is None or right is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return left + right
+                if isinstance(node.op, ast.Sub):
+                    return left - right
+                if isinstance(node.op, ast.Mult):
+                    return left * right
+                if isinstance(node.op, ast.FloorDiv):
+                    return left // right
+                if isinstance(node.op, ast.Mod):
+                    return left % right
+                if isinstance(node.op, ast.Pow):
+                    return left**right
+            except (ZeroDivisionError, OverflowError, ValueError):
+                return None
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            args = [self.fold_int(a, env) for a in node.args]
+            if any(a is None for a in args):
+                return None
+            if name in ("min", "max") and args:
+                return min(args) if name == "min" else max(args)
+            if name in ("round_up", "tiling.round_up") and len(args) == 2:
+                v, mult = args
+                return -(-v // mult) * mult
+        return None

@@ -1,0 +1,68 @@
+"""Runtime host-boundary helpers backing lint rules R4 and R5.
+
+``@host_only`` is the runtime half of R4: the linter accepts a decorated
+function as guarded because the decorator actually rejects tracers at
+call time.  ``check_adapter_ids`` is the shared validator behind R5 —
+every gather on tenant/adapter id arrays routes through it (JAX gathers
+clamp out-of-range indices, so an unvalidated id silently serves the
+last tenant's adapter).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+
+class HostOnlyError(TypeError):
+    """A traced value reached a function that must run on the host."""
+
+
+def _find_tracer(args, kwargs):
+    for leaf in jax.tree_util.tree_leaves((args, kwargs)):
+        if isinstance(leaf, jax.core.Tracer):
+            return leaf
+    return None
+
+
+def host_only(fn):
+    """Mark ``fn`` as host-side: any tracer among its arguments raises
+    :class:`HostOnlyError` immediately, instead of crashing deep inside a
+    numpy coercion or — worse — silently constant-folding at trace time.
+    The lint pass (R4) treats decorated functions as tracer-guarded."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        tracer = _find_tracer(args, kwargs)
+        if tracer is not None:
+            raise HostOnlyError(
+                f"{fn.__qualname__} is host-only but received a traced value "
+                f"({tracer.aval}); call it outside jit, or pass concrete "
+                "host data"
+            )
+        return fn(*args, **kwargs)
+
+    wrapper.__host_only__ = True
+    return wrapper
+
+
+def check_adapter_ids(adapter_ids, size: int, *, what: str = "adapter_id"):
+    """Host-boundary validation of request->tenant ids against a bank of
+    ``size`` slots.  Inside jit, JAX gather semantics silently CLAMP an
+    out-of-range index, so a bad id would be served the LAST tenant's
+    adapter with no error — catch it here instead.  Traced ids (a caller
+    composing inside its own jit) pass through unchecked; the traced
+    path's safety is the caller's host boundary."""
+    if isinstance(adapter_ids, jax.core.Tracer):
+        return adapter_ids
+    ids = np.asarray(adapter_ids)
+    bad = np.argwhere((ids < 0) | (ids >= size)).reshape(-1)
+    if bad.size:
+        raise ValueError(
+            f"{what} out of range for a bank of {size} tenants (JAX gather "
+            f"would silently clamp to the last tenant): rows "
+            f"{bad.tolist()} hold ids {ids.reshape(-1)[bad].tolist()}"
+        )
+    return adapter_ids

@@ -1,0 +1,207 @@
+"""Lint engine: file discovery, pragma handling, rule dispatch, reporting.
+
+Suppression pragmas are line-scoped and *must* carry a justification:
+
+    x = a[ids]  # lint: disable=R5 -- ids validated at the serve boundary
+
+A pragma may sit on the offending line or the line directly above it, and
+may list several rules (``disable=R2,R5``).  A pragma without the
+``-- justification`` tail is itself an error (rule id ``PRAGMA``) — CI
+passing therefore implies every suppression is explained.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+from repro.analysis.astutil import ModuleInfo
+from repro.analysis.pallas_rules import (
+    DEFAULT_ASSUME_DIM,
+    DEFAULT_VMEM_BUDGET,
+    rule_r6_pallas,
+)
+from repro.analysis.rules import RULES
+
+_PRAGMA = re.compile(
+    r"#\s*lint:\s*disable=(?P<rules>[A-Z0-9,\s]+?)"
+    r"(?:\s*--\s*(?P<why>\S.*?))?\s*$"
+)
+
+RULE_IDS = ("R1", "R2", "R3", "R4", "R5", "R6", "R7")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+    justification: str | None = None
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule}{tag}: {self.message}"
+
+
+@dataclass
+class Pragma:
+    line: int
+    rules: set[str]
+    justification: str | None
+    used: bool = False
+
+
+@dataclass
+class LintConfig:
+    vmem_budget: int = DEFAULT_VMEM_BUDGET
+    assume_dim: int = DEFAULT_ASSUME_DIM
+    show_suppressed: bool = False
+    rules: tuple[str, ...] = RULE_IDS
+    extra: dict = field(default_factory=dict)
+
+
+def _collect_pragmas(path: str, source: str) -> tuple[list[Pragma], list[Finding]]:
+    """Parse ``# lint: disable=...`` comments via tokenize (so pragma-shaped
+    strings inside literals — e.g. this linter's own source — don't count)."""
+    pragmas: list[Pragma] = []
+    bad: list[Finding] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [
+            (tok.start[0], tok.string)
+            for tok in tokens
+            if tok.type == tokenize.COMMENT
+        ]
+    except tokenize.TokenError:
+        comments = []
+    for lineno, text in comments:
+        match = _PRAGMA.search(text)
+        if not match:
+            if "lint:" in text and "disable" in text:
+                bad.append(
+                    Finding(
+                        "PRAGMA",
+                        path,
+                        lineno,
+                        f"unparseable lint pragma {text.strip()!r}; expected "
+                        "`# lint: disable=R<n>[,R<m>] -- justification`",
+                    )
+                )
+            continue
+        rules = {r.strip() for r in match.group("rules").split(",") if r.strip()}
+        why = match.group("why")
+        if not why:
+            bad.append(
+                Finding(
+                    "PRAGMA",
+                    path,
+                    lineno,
+                    "suppression pragma without a justification: append "
+                    "`-- <one-line reason>` (unexplained suppressions fail CI)",
+                )
+            )
+            continue
+        unknown = rules - set(RULE_IDS)
+        if unknown:
+            bad.append(
+                Finding(
+                    "PRAGMA",
+                    path,
+                    lineno,
+                    f"pragma names unknown rule(s) {sorted(unknown)}; "
+                    f"known rules: {', '.join(RULE_IDS)}",
+                )
+            )
+            continue
+        pragmas.append(Pragma(line=lineno, rules=rules, justification=why))
+    return pragmas, bad
+
+
+def lint_source(path: str, source: str, config: LintConfig | None = None) -> list[
+    Finding
+]:
+    config = config or LintConfig()
+    pragmas, findings = _collect_pragmas(path, source)
+    try:
+        info = ModuleInfo.parse(path, source)
+    except SyntaxError as exc:
+        findings.append(
+            Finding("PARSE", path, exc.lineno or 0, f"syntax error: {exc.msg}")
+        )
+        return findings
+
+    raw: list[tuple[str, int, str]] = []
+    for rule in RULES:
+        raw.extend(rule(info))
+    raw.extend(
+        rule_r6_pallas(
+            info, vmem_budget=config.vmem_budget, assume_dim=config.assume_dim
+        )
+    )
+
+    by_line = {}
+    for pragma in pragmas:
+        by_line[pragma.line] = pragma
+
+    for rule_id, lineno, message in sorted(raw, key=lambda r: (r[1], r[0])):
+        if rule_id not in config.rules:
+            continue
+        finding = Finding(rule_id, path, lineno, message)
+        for candidate in (lineno, lineno - 1):
+            pragma = by_line.get(candidate)
+            if pragma is not None and rule_id in pragma.rules:
+                finding.suppressed = True
+                finding.justification = pragma.justification
+                pragma.used = True
+                break
+        findings.append(finding)
+    return findings
+
+
+def discover(paths: list[str]) -> list[str]:
+    files: list[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            files.append(path)
+        else:
+            for root, dirs, names in os.walk(path):
+                dirs[:] = sorted(
+                    d for d in dirs if d not in ("__pycache__", ".git")
+                )
+                files.extend(
+                    os.path.join(root, n) for n in sorted(names) if n.endswith(".py")
+                )
+    return files
+
+
+def lint_paths(paths: list[str], config: LintConfig | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in discover(paths):
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        findings.extend(lint_source(path, source, config))
+    return findings
+
+
+def report(findings: list[Finding], *, show_suppressed: bool = False) -> tuple[
+    str, int
+]:
+    """Render findings; exit status 1 iff any unsuppressed finding remains."""
+    lines: list[str] = []
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    for finding in active:
+        lines.append(finding.render())
+    if show_suppressed:
+        for finding in suppressed:
+            lines.append(f"{finding.render()}  [why: {finding.justification}]")
+    lines.append(
+        f"{len(active)} finding(s), {len(suppressed)} suppressed "
+        f"(justified) pragma(s)"
+    )
+    return "\n".join(lines), (1 if active else 0)

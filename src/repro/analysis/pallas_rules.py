@@ -1,0 +1,251 @@
+"""R6 — Pallas kernel discipline: tiling helpers, pure index maps, VMEM budget.
+
+Applies only to modules that touch ``pl.pallas_call`` / ``pl.BlockSpec``.
+Three sub-checks share the R6 id (the finding message names the variant):
+
+* R6/tiling — block geometry must come through ``kernels/tiling.py``
+  (no re-derived ``SUBLANE``/``LANE`` constants, no inline
+  ``-(-a // b) * b`` ceil-round idiom outside tiling.py itself);
+* R6/index-map — BlockSpec index maps must be pure index arithmetic
+  (no calls, no free variables beyond grid params and module constants);
+* R6/vmem — a static worst-case estimate of per-kernel VMEM residency
+  (sum of BlockSpec block shapes + scratch shapes, fp32 baseline, 2x for
+  the pipeline's double buffering) must stay under a configurable budget.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import ModuleInfo, call_name
+
+Emit = Iterator[tuple[str, int, str]]
+
+#: Default VMEM budget per kernel (bytes).  TPU v4/v5 cores expose ~16 MiB
+#: of VMEM; the pipeline double-buffers in/out blocks, so the single-buffer
+#: estimate must fit in half of it with headroom for semaphores/regs.
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+#: Fallback for block dims the constant-folder cannot resolve (runtime
+#: ranks/segments).  512 is the repo's largest tile edge (BK), so this is a
+#: deliberately pessimistic stand-in.
+DEFAULT_ASSUME_DIM = 512
+
+def _is_tiling_module(info: ModuleInfo) -> bool:
+    return info.path.replace("\\", "/").endswith("kernels/tiling.py")
+
+
+def _uses_pallas(info: ModuleInfo) -> bool:
+    return any(
+        target in ("jax.experimental.pallas", "jax.experimental.pallas.tpu")
+        or target.startswith("jax.experimental.pallas")
+        for target in info.imports.values()
+    )
+
+
+# -- R6/tiling --------------------------------------------------------------
+
+
+def _rule_tiling(info: ModuleInfo) -> Emit:
+    for node in ast.walk(info.tree):
+        # SUBLANE/LANE re-derived locally
+        if isinstance(node, ast.Assign):
+            for target in node.targets:
+                names = (
+                    [target]
+                    if isinstance(target, ast.Name)
+                    else list(target.elts)
+                    if isinstance(target, ast.Tuple)
+                    else []
+                )
+                for t in names:
+                    if isinstance(t, ast.Name) and t.id in ("SUBLANE", "LANE"):
+                        yield (
+                            "R6",
+                            node.lineno,
+                            f"[tiling] `{t.id}` redefined outside "
+                            "kernels/tiling.py: block geometry constants must "
+                            "have one source of truth (import them from "
+                            "repro.kernels.tiling)",
+                        )
+        # inline ceil-round idiom -(-a // b) * b
+        if (
+            isinstance(node, ast.BinOp)
+            and isinstance(node.op, ast.Mult)
+            and isinstance(node.left, ast.UnaryOp)
+            and isinstance(node.left.op, ast.USub)
+            and isinstance(node.left.operand, ast.BinOp)
+            and isinstance(node.left.operand.op, ast.FloorDiv)
+            and isinstance(node.left.operand.left, ast.UnaryOp)
+            and isinstance(node.left.operand.left.op, ast.USub)
+        ):
+            yield (
+                "R6",
+                node.lineno,
+                "[tiling] inline `-(-a // b) * b` ceil-rounding: use "
+                "repro.kernels.tiling.round_up so every kernel agrees on "
+                "block alignment",
+            )
+
+
+# -- R6/index-map -----------------------------------------------------------
+
+_INDEX_MAP_ALLOWED_CALLS: set[str] = set()
+
+
+def _block_spec_calls(info: ModuleInfo) -> Iterator[ast.Call]:
+    for node in ast.walk(info.tree):
+        if isinstance(node, ast.Call) and (call_name(node) or "").endswith(
+            "BlockSpec"
+        ):
+            yield node
+
+
+def _index_map_of(spec: ast.Call) -> ast.Lambda | None:
+    candidates = list(spec.args[1:2]) + [
+        kw.value for kw in spec.keywords if kw.arg == "index_map"
+    ]
+    for cand in candidates:
+        if isinstance(cand, ast.Lambda):
+            return cand
+    return None
+
+
+def _rule_index_map(info: ModuleInfo) -> Emit:
+    for spec in _block_spec_calls(info):
+        lam = _index_map_of(spec)
+        if lam is None:
+            continue
+        params = {a.arg for a in lam.args.args}
+        for node in ast.walk(lam.body):
+            if isinstance(node, ast.Call):
+                name = call_name(node) or "<dynamic>"
+                if name not in _INDEX_MAP_ALLOWED_CALLS:
+                    yield (
+                        "R6",
+                        node.lineno,
+                        f"[index-map] call `{name}(...)` inside a BlockSpec "
+                        "index map: index maps must be pure grid-index "
+                        "arithmetic (they are traced per grid step and "
+                        "anything stateful desyncs the prefetch schedule)",
+                    )
+            elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                if node.id not in params and node.id not in info.constants:
+                    yield (
+                        "R6",
+                        node.lineno,
+                        f"[index-map] free variable `{node.id}` in a "
+                        "BlockSpec index map: only grid params and "
+                        "module-level constants are allowed (closure state "
+                        "is invisible to the compiled grid schedule)",
+                    )
+
+
+# -- R6/vmem ----------------------------------------------------------------
+
+
+def _local_int_env(info: ModuleInfo, around: ast.AST) -> dict[str, int]:
+    """Fold simple integer assignments in the enclosing function so block
+    sizes like ``bn = tiling.block(n, BN, LANE)`` resolve."""
+    fn = info.enclosing_function(around)
+    env: dict[str, int] = {}
+    if fn is None or isinstance(fn, ast.Lambda):
+        return env
+    # integer parameter defaults (block_seq=128, ...) are static tile knobs
+    args = fn.args
+    for params, defaults in (
+        (args.args[len(args.args) - len(args.defaults):], args.defaults),
+        (args.kwonlyargs, args.kw_defaults),
+    ):
+        for param, default in zip(params, defaults):
+            if default is not None:
+                val = info.fold_int(default)
+                if val is not None:
+                    env[param.arg] = val
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign):
+            targets = []
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    targets = [(t, stmt.value)]
+                elif isinstance(t, ast.Tuple) and isinstance(stmt.value, ast.Tuple):
+                    if len(t.elts) == len(stmt.value.elts):
+                        targets = [
+                            (te, ve)
+                            for te, ve in zip(t.elts, stmt.value.elts)
+                            if isinstance(te, ast.Name)
+                        ]
+            for name_node, value in targets:
+                val = info.fold_int(value, env)
+                if val is not None:
+                    env[name_node.id] = val
+    return env
+
+
+def _shape_bytes(
+    info: ModuleInfo, shape: ast.AST, env: dict[str, int], assume_dim: int
+) -> int:
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        # shape passed by name / computed: assume one pessimistic 2D block
+        return assume_dim * assume_dim * 4
+    total = 4  # fp32 baseline per element
+    for dim in shape.elts:
+        val = info.fold_int(dim, env)
+        total *= val if val is not None and val > 0 else assume_dim
+    return total
+
+
+def _pallas_call_footprint(
+    info: ModuleInfo, node: ast.Call, assume_dim: int
+) -> tuple[int, list[str]]:
+    env = _local_int_env(info, node)
+    total = 0
+    parts: list[str] = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub) or ""
+            if name.endswith("BlockSpec") and sub.args:
+                b = _shape_bytes(info, sub.args[0], env, assume_dim)
+                total += b
+                parts.append(f"block {ast.unparse(sub.args[0])}≈{b}B")
+            elif name.endswith(".VMEM") or name == "VMEM":
+                if sub.args:
+                    b = _shape_bytes(info, sub.args[0], env, assume_dim)
+                    total += b
+                    parts.append(f"scratch {ast.unparse(sub.args[0])}≈{b}B")
+    return total, parts
+
+
+def _rule_vmem(info: ModuleInfo, budget: int, assume_dim: int) -> Emit:
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not (call_name(node) or "").endswith("pallas_call"):
+            continue
+        single, parts = _pallas_call_footprint(info, node, assume_dim)
+        estimate = 2 * single  # pipeline double-buffers in/out blocks
+        if estimate > budget:
+            detail = "; ".join(parts[:6]) or "no resolvable block shapes"
+            yield (
+                "R6",
+                node.lineno,
+                f"[vmem] static VMEM estimate {estimate / 2**20:.1f} MiB "
+                f"(2x double-buffered) exceeds the "
+                f"{budget / 2**20:.1f} MiB budget: {detail}; shrink the "
+                "block tiles or raise --vmem-budget-mb with a justification",
+            )
+
+
+def rule_r6_pallas(
+    info: ModuleInfo,
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    assume_dim: int = DEFAULT_ASSUME_DIM,
+) -> Emit:
+    if not _uses_pallas(info):
+        return
+    if not _is_tiling_module(info):
+        yield from _rule_tiling(info)
+    yield from _rule_index_map(info)
+    yield from _rule_vmem(info, vmem_budget, assume_dim)

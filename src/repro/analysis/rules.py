@@ -1,0 +1,414 @@
+"""Lint rules R1-R5 and R7 (R6, the Pallas checks, lives in pallas_rules).
+
+Each rule is a generator ``rule(info: ModuleInfo) -> Iterator[(rule_id,
+lineno, message)]``.  Every rule encodes one bug class this repo has
+actually shipped and debugged — the message says which invariant broke,
+the rule table in README.md says which PR it came from.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from repro.analysis.astutil import FuncNode, ModuleInfo, call_name, decorator_names
+
+Emit = Iterator[tuple[str, int, str]]
+
+# ---------------------------------------------------------------------------
+# R1 — host nondeterminism inside traced code
+# ---------------------------------------------------------------------------
+
+_R1_TIME = {"time", "monotonic", "perf_counter", "process_time", "time_ns"}
+
+
+def rule_r1_host_rng(info: ModuleInfo) -> Emit:
+    """No host RNG / wall clock reachable from jit/scan bodies.
+
+    ``time.time()`` or ``np.random``/stdlib ``random`` inside a traced
+    function executes once at trace time and bakes a constant into the
+    compiled program — the scan body silently reuses the same "random"
+    draw every round.  Use ``jax.random`` with explicit key threading.
+    """
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if not name:
+            continue
+        parts = name.split(".")
+        bad = None
+        if len(parts) == 2 and parts[1] in _R1_TIME and info.module_alias_of(
+            parts[0], "time"
+        ):
+            bad = f"wall clock `{name}`"
+        elif len(parts) >= 2 and info.module_alias_of(parts[0], "random"):
+            bad = f"host RNG `{name}` (stdlib random)"
+        elif (
+            len(parts) >= 3
+            and parts[1] == "random"
+            and info.module_alias_of(parts[0], "numpy")
+        ):
+            bad = f"host RNG `{name}` (numpy.random)"
+        if bad and info.in_traced_context(node):
+            yield (
+                "R1",
+                node.lineno,
+                f"{bad} inside a traced (jit/scan) body: executes once at "
+                "trace time and freezes into the compiled program; thread a "
+                "jax.random key instead",
+            )
+
+
+# ---------------------------------------------------------------------------
+# R2 — inline jit construction in per-step code
+# ---------------------------------------------------------------------------
+
+
+def _is_builder_style(info: ModuleInfo, node: ast.Call) -> bool:
+    """jit calls that are fine at function scope: immediately returned
+    (builder pattern, result cached by the caller), assigned to a ``self``
+    attribute in ``__init__``-style caching, or chained into ``.lower()``
+    for AOT compilation."""
+    parent = info.parents.get(node)
+    # return jax.jit(...)  /  lambda m: jax.jit(m.step)
+    if isinstance(parent, (ast.Return, ast.Lambda)):
+        return True
+    # jax.jit(...).lower(...) / .eval_shape(...): AOT, no cache at play
+    if isinstance(parent, ast.Attribute):
+        return True
+    # self._eval_loss = jax.jit(...): cached attribute
+    if isinstance(parent, ast.Assign):
+        for target in parent.targets:
+            if (
+                isinstance(target, ast.Attribute)
+                and isinstance(target.value, ast.Name)
+                and target.value.id == "self"
+            ):
+                return True
+    # jax.jit(...)(x) immediately called once is still a per-call compile,
+    # so no exemption for ast.Call parents.
+    return False
+
+
+def rule_r2_inline_jit(info: ModuleInfo) -> Emit:
+    """No inline ``jax.jit`` construction in per-step code.
+
+    Two high-signal shapes: (a) ``jax.jit(...)`` inside a Python loop body
+    builds a fresh jit wrapper (and executable cache) every iteration;
+    (b) ``jax.jit(obj.method)`` on a non-module object at function scope
+    rebinds the method each call, so the cache never hits.  Hoist to
+    module level or a cached attribute (see ``serve._model_jit``).
+    """
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name not in ("jax.jit", "jit", "jax.pmap"):
+            continue
+        fn = info.enclosing_function(node)
+        if fn is None:  # module level is always fine
+            continue
+        if _is_builder_style(info, node):
+            continue
+        if info.in_loop(node):
+            yield (
+                "R2",
+                node.lineno,
+                f"inline `{name}(...)` inside a loop body: a fresh jit "
+                "wrapper (with an empty executable cache) is built every "
+                "iteration; hoist to module level or a cached attribute",
+            )
+            continue
+        # jax.jit(x.method) where x is a local/parameter (not an imported
+        # module): the bound-method object is new on every access, so a
+        # per-call jit never reuses its cache (the PR-4 decode_step bug).
+        target = node.args[0] if node.args else None
+        if (
+            isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id not in info.imports
+        ):
+            yield (
+                "R2",
+                node.lineno,
+                f"inline `{name}({ast.unparse(target)})` at function scope "
+                "binds a fresh method object per call, so the jit cache "
+                "never hits; build once at module level or cache on the "
+                "model (serve._model_jit)",
+            )
+
+
+# ---------------------------------------------------------------------------
+# R3 — pytree aux hygiene
+# ---------------------------------------------------------------------------
+
+_R3_UNHASHABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp)
+
+
+def _aux_expressions(info: ModuleInfo) -> Iterator[tuple[ast.AST, int]]:
+    """Yield the aux expression of every tree_flatten / register_pytree."""
+    for node in ast.walk(info.tree):
+        # def tree_flatten(self): return (children, aux)
+        if (
+            isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and node.name == "tree_flatten"
+        ):
+            for stmt in ast.walk(node):
+                if isinstance(stmt, ast.Return) and isinstance(
+                    stmt.value, ast.Tuple
+                ) and len(stmt.value.elts) == 2:
+                    yield stmt.value.elts[1], stmt.lineno
+        # register_pytree_node(Cls, lambda x: ((...), aux), ...)
+        if isinstance(node, ast.Call) and (call_name(node) or "").endswith(
+            "register_pytree_node"
+        ):
+            for arg in node.args[1:2]:
+                if isinstance(arg, ast.Lambda) and isinstance(
+                    arg.body, ast.Tuple
+                ) and len(arg.body.elts) == 2:
+                    yield arg.body.elts[1], arg.lineno
+
+
+def rule_r3_pytree_aux(info: ModuleInfo) -> Emit:
+    """Pytree aux must be hashable host data.
+
+    A device array, list, or dict in ``tree_flatten`` aux makes the
+    treedef unhashable and aborts the C++ pjit fast path (every dispatch
+    falls back to the slow python path — or worse, a per-call aux object
+    churns the executable cache).  Aux must be tuples of host scalars /
+    bytes; device values belong in the children.
+    """
+    for aux, lineno in _aux_expressions(info):
+        for sub in ast.walk(aux):
+            if isinstance(sub, _R3_UNHASHABLE_DISPLAYS):
+                yield (
+                    "R3",
+                    getattr(sub, "lineno", lineno),
+                    f"pytree aux contains an unhashable "
+                    f"`{type(sub).__name__.lower()}` display: treedef "
+                    "hashing fails and the pjit C++ fast path aborts; use "
+                    "nested tuples",
+                )
+            elif isinstance(sub, ast.Call):
+                name = call_name(sub) or ""
+                root = name.split(".")[0]
+                if info.module_alias_of(root, "jax") or root == "jnp":
+                    yield (
+                        "R3",
+                        getattr(sub, "lineno", lineno),
+                        f"pytree aux built from `{name}(...)`: device values "
+                        "in aux are unhashable (and churn the jit cache if "
+                        "they vary); put arrays in the children and encode "
+                        "statics as host scalars/bytes",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# R4 — host-only code must guard against tracers
+# ---------------------------------------------------------------------------
+
+_NP_COERCIONS = {"asarray", "array", "stack", "concatenate"}
+
+
+def _has_tracer_guard(info: ModuleInfo, fn: FuncNode, seen: set | None = None) -> bool:
+    """Tracer protection: an explicit ``jax.core.Tracer`` isinstance check
+    in the body, the ``@host_only`` decorator (runtime guard), or a call
+    into a same-module function that is itself guarded."""
+    seen = seen if seen is not None else set()
+    if fn in seen:
+        return False
+    seen.add(fn)
+    if not isinstance(fn, ast.Lambda) and any(
+        d.endswith("host_only") for d in decorator_names(fn)
+    ):
+        return True
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Attribute) and node.attr == "Tracer":
+                return True
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                short = name.split(".")[-1]
+                for callee in info.defs_by_name.get(short, ()):
+                    if _has_tracer_guard(info, callee, seen):
+                        return True
+    return False
+
+
+def rule_r4_host_only(info: ModuleInfo) -> Emit:
+    """Host conversions of function parameters need tracer guards.
+
+    ``np.asarray(param)`` on a traced value raises a cryptic
+    ``TracerArrayConversionError`` deep inside numpy (or silently
+    constant-folds at trace time).  Host-only entry points must either
+    carry ``@host_only`` (runtime guard over all args) or check
+    ``isinstance(x, jax.core.Tracer)`` before coercing.
+    """
+    for fn in ast.walk(info.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if fn in info.traced:
+            continue  # traced code converting params is a different bug (R1)
+        params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+        params.discard("self")
+        if not params:
+            continue
+        flagged: list[tuple[int, str]] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            name = call_name(node) or ""
+            parts = name.split(".")
+            if (
+                len(parts) == 2
+                and parts[1] in _NP_COERCIONS
+                and info.module_alias_of(parts[0], "numpy")
+                and isinstance(node.args[0], ast.Name)
+                and node.args[0].id in params
+            ):
+                flagged.append((node.lineno, name))
+        if flagged and not _has_tracer_guard(info, fn):
+            for lineno, name in flagged:
+                yield (
+                    "R4",
+                    lineno,
+                    f"host coercion `{name}(...)` of parameter in "
+                    f"`{fn.name}` without a tracer guard: a traced value "
+                    "here either crashes in numpy or constant-folds "
+                    "silently; decorate with @host_only or check "
+                    "isinstance(x, jax.core.Tracer)",
+                )
+
+
+# ---------------------------------------------------------------------------
+# R5 — id-array gathers need host-boundary validation
+# ---------------------------------------------------------------------------
+
+_ID_NAME = re.compile(r"^(adapter_)?ids?(_arr)?$|^tenant_ids?$|^gather_ids$")
+
+
+def _id_gathers(info: ModuleInfo) -> Iterator[tuple[ast.AST, str]]:
+    for node in ast.walk(info.tree):
+        # x[ids]
+        if isinstance(node, ast.Subscript):
+            idx = node.slice
+            if isinstance(idx, ast.Name) and _ID_NAME.match(idx.id):
+                yield node, f"subscript gather on `{idx.id}`"
+        # jnp.take(x, ids, ...) / x.take(ids)
+        elif isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name.endswith(".take") or name.endswith("take_along_axis"):
+                for arg in node.args[:2]:
+                    if isinstance(arg, ast.Name) and _ID_NAME.match(arg.id):
+                        yield node, f"`{name}` gather on `{arg.id}`"
+
+
+def rule_r5_unchecked_gather(info: ModuleInfo) -> Emit:
+    """Gathers on id arrays must sit behind host-boundary validation.
+
+    JAX gathers clamp out-of-range indices instead of raising, so a bad
+    tenant id silently serves the *last* tenant's adapter.  Any function
+    gathering by ``ids``-like names must call ``check_adapter_ids`` (or a
+    ``_check_adapter_ids``-style validator) on the host boundary first.
+    """
+    for node, what in _id_gathers(info):
+        # search the nearest non-lambda enclosing def (a gather inside a
+        # tree.map lambda is validated by its enclosing method)
+        fn = info.enclosing_function(node)
+        while isinstance(fn, ast.Lambda):
+            fn = info.enclosing_function(fn)
+        scope_nodes = ast.walk(fn) if fn is not None else ast.walk(info.tree)
+        checked = False
+        for sub in scope_nodes:
+            if isinstance(sub, ast.Call):
+                name = (call_name(sub) or "").split(".")[-1]
+                if "check" in name and ("ids" in name or "adapter" in name):
+                    checked = True
+                    break
+        if not checked:
+            yield (
+                "R5",
+                node.lineno,
+                f"{what} without id validation in scope: JAX clamps "
+                "out-of-range indices, so a bad id silently gathers the "
+                "last slot (wrong tenant); route through "
+                "check_adapter_ids() at the host boundary",
+            )
+
+
+# ---------------------------------------------------------------------------
+# R7 — shadowed / function-local numpy+jax imports
+# ---------------------------------------------------------------------------
+
+_R7_MODULES = ("numpy", "jax")
+
+
+def _imports_root_at_module_level(info: ModuleInfo, root: str) -> bool:
+    return any(
+        target == root or target.startswith(root + ".")
+        for target in info.imports.values()
+    )
+
+
+def rule_r7_shadowed_import(info: ModuleInfo) -> Emit:
+    """No shadowing numpy/jax imports, no rebinding of their aliases.
+
+    A ``import numpy as _np`` inside an engine function whose module
+    already imports numpy gives the file two bindings for one library —
+    the next refactor that moves a line out of the function picks up the
+    *other* binding (this is how host RNG leaked into the round loop).
+    Function-local imports in modules that deliberately avoid a top-level
+    jax dependency (lazy imports) are allowed: with no module binding
+    there is nothing to shadow.
+    """
+    for node in ast.walk(info.tree):
+        fn = info.enclosing_function(node)
+        if fn is None:
+            continue
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                if root in _R7_MODULES and _imports_root_at_module_level(
+                    info, root
+                ):
+                    yield (
+                        "R7",
+                        node.lineno,
+                        f"function-local `import {alias.name}` shadows the "
+                        f"module-level {root} import with a second binding; "
+                        "use the top-level alias so all call sites agree",
+                    )
+        elif isinstance(node, ast.ImportFrom):
+            root = (node.module or "").split(".")[0]
+            if root in _R7_MODULES and _imports_root_at_module_level(info, root):
+                yield (
+                    "R7",
+                    node.lineno,
+                    f"function-local `from {node.module} import ...` shadows "
+                    "module scope; hoist to the top-level imports",
+                )
+        elif isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Name) and target.id in info.imports:
+                    mod = info.imports[target.id].split(".")[0]
+                    if mod in _R7_MODULES:
+                        yield (
+                            "R7",
+                            node.lineno,
+                            f"`{target.id}` rebinds a module-level "
+                            f"{info.imports[target.id]} import inside a "
+                            "function; pick a different local name",
+                        )
+
+
+RULES = [
+    rule_r1_host_rng,
+    rule_r2_inline_jit,
+    rule_r3_pytree_aux,
+    rule_r4_host_only,
+    rule_r5_unchecked_gather,
+    rule_r7_shadowed_import,
+]

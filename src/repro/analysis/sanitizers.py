@@ -1,0 +1,257 @@
+"""Runtime sanitizers: recompile detection and implicit-transfer guards.
+
+:class:`RecompileGuard` generalizes the ad-hoc ``_cache_size()`` asserts
+the adapter-lifecycle tests grew: instead of hand-picking one jitted
+function and asserting its cache size, wrap or watch any engine and get
+a structured error naming the function, the cache growth, and the avals
+of the offending call.
+
+Two modes, composable:
+
+* ``watch(name, fn)`` — snapshot the executable-cache size now (use
+  *after* warmup); :meth:`check` raises if any watched cache grew.
+* ``wrap(name, fn)`` — return a callable proxy that records each call's
+  signature (leaf avals + static values).  Cache growth on a signature
+  seen before is a hard error — that is a true recompile.  Growth on a
+  *new* signature is recorded as a legitimate first compile, unless the
+  same aval signature keeps arriving with fresh treedefs
+  (``max_treedef_variants``), which is the aux-churn failure mode: a
+  per-call object in pytree aux gives every call a new treedef, so the
+  cache grows without bound while the avals never change.
+
+``no_implicit_transfers`` / ``guard_transfers`` wire JAX's
+``transfer_guard("disallow")`` around compiled engines: once an engine is
+warmed, dispatching it must not trigger implicit host<->device copies
+(an un-device_put operand recompiles nothing but silently serializes
+every step on a transfer).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+
+
+class RecompileError(RuntimeError):
+    """A jitted function compiled again for a signature it already served."""
+
+
+class TransferGuardError(RuntimeError):
+    """An implicit host<->device transfer fired inside a guarded region."""
+
+
+def _cache_size(fn) -> int | None:
+    """Executable-cache size of a jitted callable, or None if ``fn`` does
+    not expose one (plain callables are watchable no-ops)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+def _describe_leaf(leaf) -> tuple:
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is not None and dtype is not None:
+        return ("aval", tuple(shape), str(dtype))
+    try:
+        hash(leaf)
+    except TypeError:
+        return ("obj", type(leaf).__name__)
+    return ("val", type(leaf).__name__, leaf)
+
+
+def _signature(args, kwargs):
+    """(aval_sig, full_sig): aval_sig is shapes/dtypes + static values —
+    what *should* determine compilation; full_sig adds the treedef, so
+    structurally different calls stay distinct."""
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    aval_sig = tuple(_describe_leaf(leaf) for leaf in leaves)
+    return aval_sig, (aval_sig, str(treedef))
+
+
+def _render_sig(aval_sig) -> str:
+    parts = []
+    for entry in aval_sig[:12]:
+        if entry[0] == "aval":
+            _, shape, dtype = entry
+            parts.append(f"{dtype}[{','.join(map(str, shape))}]")
+        else:
+            parts.append(repr(entry[-1]))
+    if len(aval_sig) > 12:
+        parts.append(f"... +{len(aval_sig) - 12} more")
+    return ", ".join(parts)
+
+
+class _GuardedFn:
+    """Callable proxy around a jitted function.  Attribute access (e.g.
+    ``_cache_size``, ``lower``) passes through, so existing cache-size
+    asserts keep working on wrapped engines."""
+
+    def __init__(self, guard: "RecompileGuard", name: str, fn, cache_probe=None):
+        self._guard = guard
+        self._name = name
+        self._fn = fn
+        self._probe = cache_probe if cache_probe is not None else fn
+
+    def __call__(self, *args, **kwargs):
+        before = _cache_size(self._probe)
+        out = self._fn(*args, **kwargs)
+        after = _cache_size(self._probe)
+        self._guard._record_call(self._name, args, kwargs, before, after)
+        return out
+
+    def __getattr__(self, item):
+        return getattr(self._fn, item)
+
+    def __repr__(self):
+        return f"<RecompileGuard wrap of {self._name}: {self._fn!r}>"
+
+
+class RecompileGuard:
+    """Detect unexpected executable-cache growth in jitted engines.
+
+    Usage (watch mode, after warmup)::
+
+        guard = RecompileGuard()
+        guard.watch_model(model)          # every _serve_jit_cache entry
+        ... timed / production section ...
+        guard.check()                     # raises RecompileError on growth
+
+    Usage (wrap mode, per-call attribution)::
+
+        step = guard.wrap("decode_step", jitted_step)
+        step(params, tokens)              # raises at the offending call
+
+    As a context manager, ``__enter__`` snapshots all watched baselines
+    and ``__exit__`` runs :meth:`check`.
+    """
+
+    def __init__(self, *, max_treedef_variants: int = 4):
+        self._watched: dict[str, tuple[object, int | None]] = {}
+        self._seen_full: dict[str, set] = {}
+        self._aval_treedefs: dict[str, dict[tuple, set]] = {}
+        self._cache_after: dict[str, int | None] = {}
+        self.max_treedef_variants = max_treedef_variants
+        self.events: list[str] = []
+
+    # -- watch mode --------------------------------------------------------
+
+    def watch(self, name: str, fn) -> None:
+        """Snapshot ``fn``'s cache size now; later growth fails check().
+        Callables without a cache probe are recorded as no-ops."""
+        self._watched[name] = (fn, _cache_size(fn))
+
+    def watch_model(self, model) -> None:
+        """Watch every jitted engine cached on a model via the
+        ``_serve_jit_cache`` attribute-cache protocol (serve._model_jit)."""
+        cache = getattr(model, "_serve_jit_cache", None) or {}
+        for name, fn in cache.items():
+            self.watch(name, fn)
+
+    def check(self) -> None:
+        grew = []
+        for name, (fn, baseline) in self._watched.items():
+            current = _cache_size(fn)
+            if baseline is not None and current is not None and current > baseline:
+                grew.append(f"{name}: executable cache {baseline} -> {current}")
+        if grew:
+            raise RecompileError(
+                "unexpected recompilation after warmup — "
+                + "; ".join(grew)
+                + ". Every shape/static combination must be warmed before "
+                "the guarded section (register-then-warm discipline)."
+            )
+
+    # -- wrap mode ---------------------------------------------------------
+
+    def wrap(self, name: str, fn, *, cache_probe=None) -> _GuardedFn:
+        """Return a guarded proxy for ``fn``.  ``cache_probe`` lets you
+        attribute an engine whose jit cache lives on an inner attribute
+        (e.g. an object whose ``__call__`` dispatches ``self.fn``)."""
+        return _GuardedFn(self, name, fn, cache_probe)
+
+    def _record_call(self, name, args, kwargs, before, after) -> None:
+        aval_sig, full_sig = _signature(args, kwargs)
+        seen = self._seen_full.setdefault(name, set())
+        treedefs = self._aval_treedefs.setdefault(name, {})
+        grew = before is not None and after is not None and after > before
+        if grew and full_sig in seen:
+            raise RecompileError(
+                f"RecompileGuard[{name}]: recompiled on a previously-served "
+                f"signature (cache {before} -> {after}); offending avals: "
+                f"{_render_sig(aval_sig)}. Something non-hashable or "
+                "unstable (weak types, treedef aux, static arg identity) is "
+                "defeating the jit cache."
+            )
+        variants = treedefs.setdefault(aval_sig, set())
+        variants.add(full_sig)
+        if grew and len(variants) > self.max_treedef_variants:
+            raise RecompileError(
+                f"RecompileGuard[{name}]: {len(variants)} distinct treedefs "
+                f"for identical avals ({_render_sig(aval_sig)}), cache "
+                f"{before} -> {after}. A per-call object in pytree aux "
+                "churns the treedef and grows the executable cache without "
+                "bound — move it out of aux (see AdapterBank versioning)."
+            )
+        if grew:
+            self.events.append(f"{name}: first compile for {_render_sig(aval_sig)}")
+        seen.add(full_sig)
+        self._cache_after[name] = after
+
+    # -- context manager ---------------------------------------------------
+
+    def __enter__(self) -> "RecompileGuard":
+        self._watched = {
+            name: (fn, _cache_size(fn)) for name, (fn, _) in self._watched.items()
+        }
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.check()
+
+
+# ---------------------------------------------------------------------------
+# transfer guard
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Region in which implicit host<->device transfers are errors.
+
+    Explicit conversion (``jax.device_put``, ``jnp.asarray``) stays
+    allowed — the point is to catch *un-staged* operands: calling a
+    compiled engine with a numpy array silently re-uploads it on every
+    dispatch.  Enable after warmup (tracing inside the region would trip
+    on constant staging)."""
+    try:
+        with jax.transfer_guard("disallow"):
+            yield
+    except Exception as exc:  # XlaRuntimeError has an unstable module path
+        if "transfer" in str(exc).lower() and "disallow" in str(exc).lower():
+            raise TransferGuardError(
+                f"implicit host<->device transfer inside a guarded engine "
+                f"region: {exc}. device_put the operand once at the host "
+                "boundary instead of re-uploading per call."
+            ) from exc
+        raise
+
+
+def guard_transfers(fn):
+    """Wrap a warmed, compiled engine so every call runs under
+    ``jax.transfer_guard('disallow')``."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with no_implicit_transfers():
+            return fn(*args, **kwargs)
+
+    wrapper.__transfer_guarded__ = True
+    return wrapper

@@ -7,12 +7,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hostcheck import host_only
 from repro.core.quant import QuantizedLinear
 
 _SEP = "::"
 _QUANT = "__quant__"
 
 
+@host_only
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
@@ -68,6 +70,7 @@ def _unlistify(node):
     return node
 
 
+@host_only
 def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
                          *, key=None, data_state: str = None,
                          rank_mask=None, partition_state: str = None,

@@ -58,7 +58,7 @@ def participation_weights(key, num_clients: int, num_sampled: int):
     return jnp.zeros((num_clients,), jnp.float32).at[perm[:num_sampled]].set(1.0)
 
 
-def make_round_body(model, *, strategy, opt_cfg):
+def make_round_body(model, *, strategy, opt_cfg, track_update_norm=False):
     """Returns round_body(base, adapters, opt_N, batches, round_idx, weights).
 
     ``adapters`` is a client-stacked :class:`AdapterSet`: its ``lora`` tree
@@ -79,6 +79,13 @@ def make_round_body(model, *, strategy, opt_cfg):
         ranks in the padded representation: client gradients are masked to
         the active rank rows and the server aggregate is rank-aware (see
         ``core/aggregation``).
+
+    ``track_update_norm`` adds a per-round ``update_norm`` metric: the
+    gamma-scaled norm of the post-aggregation adapter movement, the series
+    the collapse sentinel (``repro.analysis.stability_check``) judges
+    against the Theorem 4.2 moment-scale prediction.  Opt-in so the
+    default metrics treedef (and every pinned bit-identity test) is
+    untouched.
     """
     strat = get_strategy(strategy)
     _, opt_update = make_optimizer(opt_cfg)
@@ -139,6 +146,13 @@ def make_round_body(model, *, strategy, opt_cfg):
         new_lora = strat.aggregate(new_lora, round_idx, weights=weights,
                                    rank_mask=mask_N)
         metrics = {"loss": ms["loss"].mean(), "grad_norm": ms["grad_norm"].mean()}
+        if track_update_norm:
+            # gamma-scaled aggregated adapter movement: to first order the
+            # effective-weight step is gamma*(dB·A + B·dA), so |gamma|*|d
+            # lora| tracks the Thm 4.2 moment scale the sentinel checks
+            g_scale = abs(g) if static else jnp.mean(jnp.abs(gamma_N))
+            metrics["update_norm"] = g_scale * global_norm(
+                jax.tree.map(lambda a, b: a - b, new_lora, lora_N))
         return dataclasses.replace(adapters, lora=new_lora), new_opt, metrics
 
     return round_body
@@ -160,7 +174,8 @@ def make_fed_round_step(model, *, strategy, opt_cfg, donate: bool = True,
 
 def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
                    batch_fn=None, client_weights=None,
-                   donate: bool = True, jit: bool = True):
+                   donate: bool = True, jit: bool = True,
+                   track_update_norm: bool = False):
     """Build the chunked scan executor.
 
     Returns run_chunk(base, adapters, opt_N, key, round0, batches=None,
@@ -188,7 +203,8 @@ def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
 
     ``adapters``/``opt_N``/``key`` are donated when ``jit`` and ``donate``.
     """
-    round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg)
+    round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
+                                 track_update_norm=track_update_norm)
     size_w = None if client_weights is None else jnp.asarray(
         client_weights, jnp.float32)
 
@@ -277,7 +293,8 @@ class FederatedTrainer:
 
     def __init__(self, model, dataset, *, lora_cfg, fed_cfg, opt_cfg,
                  seed: int = 0, base_params=None, data_mode: str = "host",
-                 chunk_rounds: int = 0, mesh=None):
+                 chunk_rounds: int = 0, mesh=None,
+                 track_stability: bool = False):
         self.model = model
         self.dataset = dataset
         self.fed_cfg = fed_cfg
@@ -285,6 +302,9 @@ class FederatedTrainer:
         self.data_mode = data_mode
         self.chunk_rounds = chunk_rounds
         self.mesh = mesh
+        # opt-in per-round update_norm metric feeding stability_report();
+        # off by default so the engine's metrics treedef stays pinned
+        self.track_stability = track_stability
         n = fed_cfg.num_clients
         ranks = lora_cfg.ranks
         if ranks is not None:
@@ -371,7 +391,8 @@ class FederatedTrainer:
             self.model, strategy=self.fed_cfg.aggregation,
             opt_cfg=self.opt_cfg,
             participation=self.fed_cfg.participation, batch_fn=batch_fn,
-            client_weights=self.client_weights, donate=True)
+            client_weights=self.client_weights, donate=True,
+            track_update_norm=self.track_stability)
 
     @functools.cached_property
     def round_step(self):
@@ -489,6 +510,25 @@ class FederatedTrainer:
         """The scaling factor client ``client`` trains and serves with
         (gamma_i = scaling(alpha, r_i, N) under heterogeneous ranks)."""
         return self.gammas[client]
+
+    def stability_report(self, **kwargs):
+        """Judge the run's per-round ``update_norm`` series against the
+        Theorem 4.2 moment-scale prediction (requires
+        ``track_stability=True``; see repro.analysis.stability_check)."""
+        from repro.analysis.stability_check import stability_report
+        norms = [h["update_norm"] for h in self.history
+                 if "update_norm" in h]
+        if len(norms) < 2:
+            raise ValueError(
+                "stability_report needs >= 2 rounds of update_norm history "
+                "— construct the trainer with track_stability=True and run "
+                "at least two rounds")
+        gamma = (self.gamma if self.gamma is not None
+                 else float(np.mean(self.gammas)))
+        return stability_report(
+            norms, gamma=gamma, r=self.lora_cfg.rank,
+            n_clients=self.fed_cfg.num_clients, alpha=self.lora_cfg.alpha,
+            **kwargs)
 
     def publish_adapters(self, live, clients=None) -> int:
         """Push the current round's adapters into a live serving bank.

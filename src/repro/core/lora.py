@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as onp
 
+from repro.analysis.hostcheck import check_adapter_ids
 from repro.core.quant import QuantizedLinear, dequantize
 
 # which leaves inside each block subtree are adaptable, per target name
@@ -549,9 +550,8 @@ class AdapterBank:
         r_pad = adapter_rank(prepared.lora)
         if ranks is None:
             if stacked.rank_mask is not None:
-                import numpy as _onp
                 ranks = tuple(int(r) for r in
-                              _onp.asarray(stacked.rank_mask).sum(axis=-1))
+                              onp.asarray(stacked.rank_mask).sum(axis=-1))
             else:
                 ranks = (r_pad,) * n
         return cls(lora=prepared.lora, rank_mask=rank_mask(ranks, r_pad),
@@ -629,6 +629,7 @@ class AdapterBank:
 
         Copies every adapter leaf per call — prefer :meth:`requests` on the
         serving hot path, which defers the gather to the projection site."""
+        check_adapter_ids(ids, self.size, what="gather id")
         ids = jnp.asarray(ids)
         lora = jax.tree.map(lambda x: x[ids], self.lora)
         return AdapterSet(lora=lora, gamma=1.0,
@@ -641,6 +642,7 @@ class AdapterBank:
         ids-indexed BlockSpecs on the fused tiers, or as a per-layer XLA
         gather on the reference tier — instead of materializing ``(B, ...)``
         copies of every adapter leaf each generation step."""
+        check_adapter_ids(ids, self.size, what="request id")
         return AdapterSet(lora=self.lora, gamma=1.0,
                           rank=adapter_rank(self.lora), batched=True,
                           ids=jnp.asarray(ids, jnp.int32))

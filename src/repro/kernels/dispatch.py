@@ -240,8 +240,8 @@ def lora_linear_batched(x, w, lora, gamma: float = 1.0):
     if mode == "reference" or 0 in (*x.shape, w.shape[-1], a.shape[-2]):
         if quantized:   # reference tier: dequantize up front (parity policy)
             w = dequantize(w)
-        ar = a if ids is None else jnp.take(a, ids, axis=0)
-        br = b if ids is None else jnp.take(b, ids, axis=0)
+        ar = a if ids is None else jnp.take(a, ids, axis=0)  # lint: disable=R5 -- ids traced here; concrete ids range-checked at the host boundary (check_adapter_ids)
+        br = b if ids is None else jnp.take(b, ids, axis=0)  # lint: disable=R5 -- same host-boundary check as the gather above
         y = x @ w
         xa = jnp.einsum("bsk,brk->bsr", x, ar)
         return y + gamma * jnp.einsum("bsr,bor->bso", xa, br)

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hostcheck import check_adapter_ids
+from repro.analysis.sanitizers import guard_transfers
 from repro.checkpoint.io import load_adapter_state
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LoRAConfig
@@ -213,21 +215,9 @@ def generate(model, params, prompt, steps: int, max_len: int, adapters=None,
                max_len=int(max_len), temperature=float(temperature))
 
 
-def _check_adapter_ids(adapter_ids, size: int, *, what: str = "adapter_id"):
-    """Host-boundary validation of request->tenant ids against a bank of
-    ``size`` tenants.  Inside jit, JAX gather semantics silently CLAMP an
-    out-of-range index, so a bad id would be served the LAST tenant's
-    adapter with no error — catch it here instead.  Traced ids (a caller
-    composing inside its own jit) pass through unchecked."""
-    if isinstance(adapter_ids, jax.core.Tracer):
-        return
-    ids = np.asarray(adapter_ids)
-    bad = np.argwhere((ids < 0) | (ids >= size)).reshape(-1)
-    if bad.size:
-        raise ValueError(
-            f"{what} out of range for a bank of {size} tenants (JAX gather "
-            f"would silently clamp to the last tenant): rows "
-            f"{bad.tolist()} hold ids {ids.reshape(-1)[bad].tolist()}")
+# Host-boundary validation of request->tenant ids against a bank of ``size``
+# tenants (shared with AdapterBank.gather/requests; traced ids pass through).
+_check_adapter_ids = check_adapter_ids
 
 
 def generate_banked(model, params, bank: AdapterBank, adapter_ids, prompt,
@@ -444,7 +434,7 @@ def _jit_paged_chunk(model):
 
 def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
                     block_size=8, chunk=8, max_len=None, wait=True,
-                    on_boundary=None):
+                    on_boundary=None, guard=None, transfer_guard=False):
     """Continuous-batching serve loop: admit / decode-chunk / evict until
     every request completes.  Returns the requests (mutated in place —
     ``tokens``, ``t_first``, ``t_done`` filled) sorted by rid.
@@ -466,7 +456,16 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
     (before admission, between decode chunks) with a running boundary
     index — the adapter-lifecycle swap window: publishing into a live bank
     here is atomic with respect to decode chunks (the chunk already
-    dispatched gathered the old slots; the next gathers the new)."""
+    dispatched gathered the old slots; the next gathers the new).
+
+    ``guard``: optional :class:`repro.analysis.sanitizers.RecompileGuard`
+    — the admit/chunk engines are wrapped so any executable-cache growth
+    on an already-served signature (e.g. a publish that churns the bank
+    treedef) raises with the offending avals.  ``transfer_guard=True``
+    additionally runs both engines under
+    ``jax.transfer_guard("disallow")``; enable it on warmed shapes with
+    device-resident params (tracing/compiling under the guard would trip
+    on legitimate staging transfers)."""
     reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
     if not reqs:
         return []
@@ -502,6 +501,12 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
     free_slots = list(range(max_batch))
     admit = _jit_paged_admit(model)
     chunk_run = _jit_paged_chunk(model)
+    if guard is not None:
+        admit = guard.wrap("paged_admit", admit)
+        chunk_run = guard.wrap("paged_chunk", chunk_run)
+    if transfer_guard:
+        admit = guard_transfers(admit)
+        chunk_run = guard_transfers(chunk_run)
     t0 = time.monotonic()
     clock = ((lambda: time.monotonic() - t0) if wait
              else (lambda: float("inf")))

@@ -1,0 +1,39 @@
+"""Shared test harness options.
+
+``pytest --recompile-guard`` wraps every jitted serving engine built
+through ``serve._model_jit`` in a :class:`repro.analysis.sanitizers.
+RecompileGuard` (wrap mode, fresh guard per test): a recompile on a
+previously-served signature, or unbounded treedef churn at fixed avals,
+fails the offending test at the offending call instead of showing up as
+slowness.  Off by default — the guard adds a per-call signature hash.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--recompile-guard", action="store_true", default=False,
+        help="run serve's jitted engines under a RecompileGuard "
+             "(recompiles on served signatures become hard errors)")
+
+
+@pytest.fixture(autouse=True)
+def _recompile_guard(request, monkeypatch):
+    if not request.config.getoption("--recompile-guard"):
+        yield
+        return
+    from repro.analysis.sanitizers import RecompileGuard
+    from repro.launch import serve
+
+    guard = RecompileGuard(max_treedef_variants=8)
+    orig = serve._model_jit
+
+    def guarded_model_jit(model, name, builder):
+        # the raw jitted fn stays in model._serve_jit_cache (tests probe
+        # _cache_size there); only the handle serve dispatches through is
+        # wrapped, so attribution lands on the engine name
+        fn = orig(model, name, builder)
+        return guard.wrap(name, fn, cache_probe=fn)
+
+    monkeypatch.setattr(serve, "_model_jit", guarded_model_jit)
+    yield guard
