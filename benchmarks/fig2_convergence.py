@@ -20,7 +20,7 @@ def main(rounds: int = 30, emit=print):
     results = {}
     for method in MAIN:
         for rank in RANKS:
-            t0 = time.time()
+            t0 = time.monotonic()
             tr = run_method(method, rank=rank, rounds=rounds, model=model,
                             base=base)
             for h in tr.history[:: max(1, rounds // 10)]:

@@ -108,7 +108,7 @@ def main() -> None:
     rounds = 10 if fast else None
 
     def run(name, fn, **kw):
-        t0 = time.time()
+        t0 = time.monotonic()
         print(f"# === {name} ===", flush=True)
         try:
             fn(**kw)
@@ -116,7 +116,7 @@ def main() -> None:
             import traceback
             print(f"{name},ERROR,{e}")
             traceback.print_exc()
-        print(f"# === {name} done in {time.time()-t0:.1f}s ===", flush=True)
+        print(f"# === {name} done in {time.monotonic()-t0:.1f}s ===", flush=True)
 
     if "comm" in want:
         from benchmarks import comm_table

@@ -165,6 +165,25 @@ def assert_stabilized(update_norms, **kwargs) -> StabilityReport:
     return rep
 
 
+def recovery_action(report: StabilityReport, *,
+                    scale_tol: float = 4.0) -> str:
+    """Classify what a watchdog retry should change after a failed verdict.
+
+    ``"rescale"``: the CONFIG half of Theorem 4.2 is violated — the run's
+    gamma itself predicts a collapsed/exploded moment scale, which no
+    participation backoff or fault reseed can fix (it is deterministic in
+    (gamma, r, N)).  The paper's own remedy applies: adopt
+    gamma = alpha*sqrt(N/r).
+
+    ``"backoff"``: the config is sound but the MEASURED norms drifted —
+    plausibly corrupt/stale uploads slipping through; retry with reduced
+    participation and a fresh fault draw.
+    """
+    if not (1.0 / scale_tol <= report.predicted <= scale_tol):
+        return "rescale"
+    return "backoff"
+
+
 def scaling_flatness(moments, tol: float = 4.0) -> tuple[bool, float]:
     """Theorem 4.2 invariance check over a sweep: SFed-LoRA keeps the
     aggregated forward moment flat across ``(N, r)`` configurations.

@@ -74,7 +74,7 @@ def _unlistify(node):
 def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
                          *, key=None, data_state: str = None,
                          rank_mask=None, partition_state: str = None,
-                         adapter_meta: dict = None):
+                         adapter_meta: dict = None, async_state: dict = None):
     """Checkpoint one federated run.
 
     ``key`` (the trainer's carried JAX PRNG key) and ``data_state`` (the host
@@ -91,6 +91,11 @@ def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
     completes the AdapterSet serialization: a consumer with no trainer (the
     serving path) can rebuild every client's scaled adapters from the
     checkpoint alone — see :func:`load_adapter_state`.
+
+    ``async_state`` ({"tau": (N,) staleness counters, "rho": scalar gamma
+    correction}) is the buffered engine's extra carry; without it a
+    restored async run would resume with every in-flight upload silently
+    declared fresh.
     """
     tree = {"base": base, "lora": lora, "opt": opt_state,
             "round": np.asarray(round_idx)}
@@ -105,6 +110,9 @@ def save_federated_state(path: str, base, lora, opt_state, round_idx: int,
     if adapter_meta is not None:
         tree["adapter_meta"] = {k: np.asarray(v)
                                 for k, v in adapter_meta.items()}
+    if async_state is not None:
+        tree["async_state"] = {k: np.asarray(v)
+                               for k, v in async_state.items()}
     save_pytree(path, tree)
 
 
@@ -131,6 +139,9 @@ def load_federated_state(path: str, *, full: bool = False):
     if "adapter_meta" in t:
         extras["adapter_meta"] = {k: np.asarray(v)
                                   for k, v in t["adapter_meta"].items()}
+    if "async_state" in t:
+        extras["async_state"] = {k: np.asarray(v)
+                                 for k, v in t["async_state"].items()}
     return out + (key, data_state, extras)
 
 

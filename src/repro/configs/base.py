@@ -154,6 +154,20 @@ class FederatedConfig:
     # weight the server aggregate by per-client example counts
     # (dataset.size_weights) instead of a plain client mean
     weight_by_size: bool = False
+    # --- async buffered aggregation (FedBuff-style; core/federated.py) ----
+    # None = synchronous engine.  An int switches to the buffered engine
+    # and caps how many accepted uploads aggregate per round (0 = no cap,
+    # M = N — bit-identical to the synchronous engine at zero faults).
+    buffer_size: Optional[int] = None
+    staleness_beta: float = 0.5    # upload discount (1 + tau)^-beta
+    # server-side screening before aggregation: reject non-finite uploads
+    # and finite uploads whose norm exceeds screen_norm_mult x the round's
+    # candidate median (robust to up to half the cohort corrupted)
+    screen_updates: bool = True
+    screen_norm_mult: float = 10.0
+    # deterministic fault injection (repro.core.faults.FaultConfig);
+    # a non-None value implies the buffered engine
+    faults: Optional["FaultConfig"] = None  # noqa: F821 (core/faults.py)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -83,6 +83,64 @@ def _map_ab_pairs(tree, fn_pair):
     return walk(tree)
 
 
+def _map_ab2(t1, t2, fn_a, fn_b):
+    """Two-tree variant of ``_map_ab``: apply ``fn_a(x1, x2)`` /
+    ``fn_b(x1, x2)`` to corresponding a / b leaves of two structurally
+    identical adapter trees (e.g. a client-local tree and its server
+    aggregate)."""
+    def walk(n1, n2):
+        if isinstance(n1, dict):
+            if n1 and set(n1) <= {"a", "b"}:
+                out = {}
+                if "a" in n1:
+                    out["a"] = fn_a(n1["a"], n2["a"])
+                if "b" in n1:
+                    out["b"] = fn_b(n1["b"], n2["b"])
+                return out
+            return {k: walk(v, n2[k]) for k, v in n1.items()}
+        return n1
+    return walk(t1, t2)
+
+
+def combine_received(local, aggregated, receive, agg_a, agg_b):
+    """Per-client broadcast step for the buffered engine.
+
+    ``receive`` is a (N,) bool row mask: clients holding an in-flight
+    update (stragglers, buffer overflow) keep their LOCAL state on every
+    leaf; everyone else takes the server ``aggregated`` value — but only
+    on the leaves the strategy actually aggregates (``agg_a``/``agg_b``
+    may be traced, e.g. rolora's parity flags).  Non-aggregated leaves
+    (e.g. B under fedsa) always stay local."""
+    def comb(flag):
+        def f(lo, ag):
+            keep = jnp.asarray(flag, bool) & receive.reshape(
+                (-1,) + (1,) * (lo.ndim - 1))
+            return jnp.where(keep, ag, lo)
+        return f
+    return _map_ab2(local, aggregated, comb(agg_a), comb(agg_b))
+
+
+def per_client_finite(tree):
+    """(N,) bool: does client i's slice of every leaf hold only finite
+    values?  The server-side non-finite screen over a stacked upload."""
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    ok = jnp.ones((n,), bool)
+    for x in leaves:
+        ok = ok & jnp.isfinite(x).reshape(n, -1).all(axis=1)
+    return ok
+
+
+def per_client_norm(tree):
+    """(N,) global L2 norm of client i's slice across all leaves."""
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    sq = jnp.zeros((n,), jnp.float32)
+    for x in leaves:
+        sq = sq + jnp.square(x.astype(jnp.float32)).reshape(n, -1).sum(axis=1)
+    return jnp.sqrt(sq)
+
+
 def mask_grads(grads, train_a, train_b):
     """Zero out gradients of frozen matrices (flags may be traced bools)."""
     fa = lambda g: g * jnp.asarray(train_a, g.dtype)
@@ -118,8 +176,12 @@ def aggregate_clients(lora_stacked, agg_a, agg_b, *, axis: int = 0,
             if rank_mask is not None:
                 w = w * _rank_weight(rank_mask, x, which)
             den = w.sum(axis=axis, keepdims=True)
-            mean = (x * w).sum(axis=axis, keepdims=True) / jnp.maximum(
-                den, 1e-9)
+            # multiply by the reciprocal rather than divide: x.mean() lowers
+            # to sum * (1/n), so this keeps the all-ones weighted mean
+            # BIT-identical to the unweighted fast path above (the buffered
+            # engine's staleness-0 conformance guarantee rests on it)
+            mean = (x * w).sum(axis=axis, keepdims=True) * (
+                1.0 / jnp.maximum(den, 1e-9))
             mean = jnp.broadcast_to(mean, x.shape)
             if rank_mask is not None:
                 mean = mean * _rank_weight(rank_mask, x, which)
@@ -178,6 +240,14 @@ class Strategy:
 
     def agg_flags(self, round_idx):
         return (True, True)
+
+    def agg_leaf_flags(self, round_idx):
+        """Which (a, b) leaves the server WRITES when broadcasting its
+        aggregate — what the buffered engine's receive step must honor so
+        non-aggregated leaves (e.g. B under fedsa) stay local.  For
+        flag-expressible strategies this is ``agg_flags``; structural
+        aggregators that rewrite both matrices (flora) override it."""
+        return self.agg_flags(round_idx)
 
     def mask_grads(self, grads, round_idx):
         ta, tb = self.train_flags(round_idx)
@@ -317,6 +387,81 @@ class StackingStrategy(Strategy):
             return out
         out = _map_ab_pairs(lora_stacked, redistribute)
         return out if aset is None else dataclasses.replace(aset, lora=out)
+
+    def agg_leaf_flags(self, round_idx):
+        # the SVD redistribution rewrites BOTH factors for every client,
+        # even though train_flags/agg_flags describe it as coupled
+        return (True, True)
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferedStrategy(Strategy):
+    """FedBuff-style async wrapper around any registered strategy.
+
+    The buffered engine (``core/federated.py``) aggregates a buffer of at
+    most ``buffer_size`` accepted uploads per round; each upload carries a
+    staleness counter tau (rounds spent in flight) and is discounted by
+    ``(1 + tau)^-beta`` in the server mean.  The wrapper itself only
+    bundles the server-side policy knobs and delegates every strategy
+    concern (train/agg flags, the aggregate, comm accounting) to
+    ``inner`` — so one buffered engine serves every registered method.
+
+    ``screen`` enables server-side update screening before aggregation:
+    non-finite uploads are always rejected, and finite uploads whose
+    update norm exceeds ``screen_mult`` x the round's mean accepted norm
+    are rejected as outliers (only when more than one candidate arrived —
+    a single upload has no population to be an outlier of).  Rejected and
+    stale uploads shrink the round's effective client count N_eff, and
+    the engine's staleness-corrected gamma_eff = gamma * sqrt(N_eff / N)
+    tracks it (Theorem 4.2 with N_eff in place of N).
+    """
+    inner: Strategy = None
+    buffer_size: int = 0          # max accepted uploads per round; 0 = M=N
+    beta: float = 0.5             # staleness discount exponent
+    screen: bool = True
+    screen_mult: float = 10.0
+
+    def __post_init__(self):
+        if not isinstance(self.inner, Strategy):
+            raise ValueError(
+                "BufferedStrategy needs inner=<Strategy>; build one via "
+                "aggregation.buffered(name, ...)")
+        if self.buffer_size < 0:
+            raise ValueError(
+                f"buffer_size must be >= 0 (0 = no cap), got "
+                f"{self.buffer_size}")
+
+    def train_flags(self, round_idx):
+        return self.inner.train_flags(round_idx)
+
+    def agg_flags(self, round_idx):
+        return self.inner.agg_flags(round_idx)
+
+    def agg_leaf_flags(self, round_idx):
+        return self.inner.agg_leaf_flags(round_idx)
+
+    def mask_grads(self, grads, round_idx):
+        return self.inner.mask_grads(grads, round_idx)
+
+    def aggregate(self, lora_stacked, round_idx, *, weights=None,
+                  rank_mask=None):
+        return self.inner.aggregate(lora_stacked, round_idx,
+                                    weights=weights, rank_mask=rank_mask)
+
+    def upload_bytes(self, lora_stacked, round_idx: int = 0) -> int:
+        return self.inner.upload_bytes(lora_stacked, round_idx)
+
+    def upload_bytes_per_client(self, lora_stacked, round_idx: int = 0, *,
+                                ranks):
+        return self.inner.upload_bytes_per_client(lora_stacked, round_idx,
+                                                  ranks=ranks)
+
+
+def buffered(inner, **kwargs) -> BufferedStrategy:
+    """Wrap a strategy (name or instance) for the async buffered engine."""
+    inner = get_strategy(inner)
+    return BufferedStrategy(name=f"buffered:{inner.name}", inner=inner,
+                            **kwargs)
 
 
 REGISTRY = {

@@ -1,0 +1,171 @@
+"""Deterministic, on-device fault injection for the federated engine.
+
+Real cross-device fleets never deliver the regime the synchronous engine
+assumes (every sampled client returns a finite, fresh update every round).
+This module injects the three failure modes that break it — dropped
+uploads, straggling (delayed) uploads, and corrupted uploads — as pure
+functions of the round's PRNG key, so:
+
+  - the fault stream is SEEDED and reproducible: the same
+    :class:`FaultConfig` and engine seed replay the identical failure
+    schedule, which is what makes crash-resume-under-faults bit-exact and
+    chaos tests deterministic;
+  - everything runs inside the compiled scan (``jax.random`` on traced
+    keys — no host RNG, no wall clocks), keeping the engine one dispatch
+    per chunk and the trace-safety lint (R1/R2) green;
+  - zero-rate faults are STATIC no-ops: the masks collapse to constant
+    ``False`` arrays at trace time, so a null fault model adds no RNG
+    consumption and the buffered engine stays bit-identical to the
+    synchronous engine (the staleness-0 conformance guarantee).
+
+The per-round straggle draw composes into a geometric delay distribution:
+an upload that straggles stays in flight and is re-drawn next round, so
+``P(delay = k) = p^k (1-p)`` — the ``straggle=geom:P`` CLI syntax names
+it explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+CORRUPT_MODES = ("nan", "noise")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-round fault rates (all probabilities in [0, 1]).
+
+    ``dropout``   P(an attempted upload is lost this round) — the client
+                  resyncs from the broadcast next round, its pending
+                  update (fresh or stale) is gone.
+    ``straggle``  P(an attempted upload is delayed) — the update stays in
+                  flight with staleness tau+1 and retries next round
+                  (geometric delay; see module docstring).
+    ``corrupt``   P(an ARRIVING upload is corrupted in transit).  The
+                  corruption touches only the uploaded copy, never the
+                  client's local state.
+    ``corrupt_mode``  "nan": leaves overwritten with NaN/Inf (what server
+                  screening must catch); "noise": leaves perturbed by
+                  ``noise_scale`` x their RMS — finite but norm-outlying.
+    ``seed``      folded into the round key so two fault models on the
+                  same engine key stream draw independent schedules.
+    """
+    dropout: float = 0.0
+    straggle: float = 0.0
+    corrupt: float = 0.0
+    corrupt_mode: str = "nan"
+    noise_scale: float = 10.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for f in ("dropout", "straggle", "corrupt"):
+            v = getattr(self, f)
+            if not 0.0 <= float(v) <= 1.0:
+                raise ValueError(f"FaultConfig.{f} must be in [0, 1], "
+                                 f"got {v}")
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(
+                f"unknown corrupt_mode '{self.corrupt_mode}'; options "
+                f"{CORRUPT_MODES}")
+
+    @property
+    def null(self) -> bool:
+        """True when every fault rate is zero (static no-op model)."""
+        return self.dropout == 0.0 and self.straggle == 0.0 \
+            and self.corrupt == 0.0
+
+
+def parse_faults(spec: str) -> FaultConfig:
+    """Parse the ``--faults`` CLI syntax into a :class:`FaultConfig`.
+
+    ``"dropout=0.1,straggle=geom:0.3,corrupt=0.01"`` — keys are
+    ``dropout`` / ``straggle`` (optionally ``geom:P``; geometric is the
+    only distribution, named for explicitness) / ``corrupt`` / ``mode``
+    (nan|noise) / ``noise`` (scale) / ``seed``.  An empty spec is the
+    null model.
+    """
+    kw = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        if "=" not in part:
+            raise ValueError(
+                f"bad --faults entry '{part}': expected key=value")
+        k, v = part.split("=", 1)
+        k = k.strip()
+        v = v.strip()
+        if k == "straggle":
+            if v.startswith("geom:"):
+                v = v[len("geom:"):]
+            kw["straggle"] = float(v)
+        elif k in ("dropout", "corrupt"):
+            kw[k] = float(v)
+        elif k == "mode":
+            kw["corrupt_mode"] = v
+        elif k == "noise":
+            kw["noise_scale"] = float(v)
+        elif k == "seed":
+            kw["seed"] = int(v)
+        else:
+            raise ValueError(
+                f"unknown --faults key '{k}'; expected one of dropout, "
+                "straggle, corrupt, mode, noise, seed")
+    return FaultConfig(**kw)
+
+
+class FaultModel:
+    """Trace-safe sampler for one :class:`FaultConfig`.
+
+    Stateless: every draw is a pure function of the caller's key (the
+    engine derives one per round from its carried scan key), so fault
+    schedules are chunking-invariant and resume bit-exactly from a
+    checkpointed key.
+    """
+
+    def __init__(self, cfg: FaultConfig = None):
+        self.cfg = cfg or FaultConfig()
+
+    def sample(self, key, n: int) -> dict:
+        """Per-client fault masks for one round: ``{"drop", "straggle",
+        "corrupt"}``, each a (n,) bool array.  Zero-rate masks are
+        constant ``False`` at trace time (no RNG consumed)."""
+        cfg = self.cfg
+        key = jax.random.fold_in(key, cfg.seed)
+        kd, ks, kc = jax.random.split(key, 3)
+        off = jnp.zeros((n,), bool)
+        return {
+            "drop": (jax.random.bernoulli(kd, cfg.dropout, (n,))
+                     if cfg.dropout > 0 else off),
+            "straggle": (jax.random.bernoulli(ks, cfg.straggle, (n,))
+                         if cfg.straggle > 0 else off),
+            "corrupt": (jax.random.bernoulli(kc, cfg.corrupt, (n,))
+                        if cfg.corrupt > 0 else off),
+        }
+
+    def corrupt_tree(self, key, tree, mask):
+        """Corrupt the masked clients' rows of a client-stacked tree.
+
+        ``mask`` is (n,) bool; only those clients' leaves change — the
+        corruption models an upload damaged in transit, so it must apply
+        to a COPY of the update, never the client's local state (the
+        caller passes the upload tree).  "nan" mode alternates NaN / Inf
+        across leaves; "noise" adds ``noise_scale`` x leaf-RMS Gaussian
+        noise (finite, but a norm outlier the screen should reject)."""
+        cfg = self.cfg
+        if cfg.corrupt <= 0:
+            return tree
+        leaves, treedef = jax.tree.flatten(tree)
+        out = []
+        for i, x in enumerate(leaves):
+            row = mask.reshape((-1,) + (1,) * (x.ndim - 1))
+            if cfg.corrupt_mode == "nan":
+                bad = jnp.asarray(
+                    jnp.inf if i % 2 else jnp.nan, x.dtype)
+                out.append(jnp.where(row, bad, x))
+            else:
+                rms = jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-12)
+                noise = jax.random.normal(
+                    jax.random.fold_in(key, i), x.shape, x.dtype)
+                out.append(x + jnp.where(row, cfg.noise_scale * rms * noise,
+                                         jnp.zeros((), x.dtype)))
+        return jax.tree.unflatten(treedef, out)

@@ -58,36 +58,11 @@ def participation_weights(key, num_clients: int, num_sampled: int):
     return jnp.zeros((num_clients,), jnp.float32).at[perm[:num_sampled]].set(1.0)
 
 
-def make_round_body(model, *, strategy, opt_cfg, track_update_norm=False):
-    """Returns round_body(base, adapters, opt_N, batches, round_idx, weights).
-
-    ``adapters`` is a client-stacked :class:`AdapterSet`: its ``lora`` tree
-    and ``opt_N`` carry a leading client dim, ``batches`` leaves are
-    (N, local_steps, batch, ...).  Returns (adapters', opt_N, metrics).
-
-    The scaling factor and the per-client rank mask are READ OFF the
-    AdapterSet — the engine no longer threads them as loose arguments:
-
-      - a python-float ``adapters.gamma`` (homogeneous, or uniform
-        per-client gammas collapsed by AdapterSet) stays static and is
-        folded into B at trace time by the model API;
-      - a per-client (N,) ``adapters.gamma`` reaches each client as a
-        traced gamma_i under the vmap and is folded into that client's B
-        inside the loss (``AdapterSet.fold_gamma``), so the gamma reaching
-        the kernels is always the static 1.0 the fused Pallas tier needs;
-      - ``adapters.rank_mask`` (N, r_max) enables heterogeneous per-client
-        ranks in the padded representation: client gradients are masked to
-        the active rank rows and the server aggregate is rank-aware (see
-        ``core/aggregation``).
-
-    ``track_update_norm`` adds a per-round ``update_norm`` metric: the
-    gamma-scaled norm of the post-aggregation adapter movement, the series
-    the collapse sentinel (``repro.analysis.stability_check``) judges
-    against the Theorem 4.2 moment-scale prediction.  Opt-in so the
-    default metrics treedef (and every pinned bit-identity test) is
-    untouched.
-    """
-    strat = get_strategy(strategy)
+def _make_client_local(model, strat, opt_cfg):
+    """The per-client local-training scan (``local_steps`` optimizer steps
+    on one client's adapter state), shared by the synchronous and the
+    buffered round bodies — the two engines must differ only in the
+    server-side delivery/aggregation path, never in client compute."""
     _, opt_update = make_optimizer(opt_cfg)
 
     def client_local(base, lora, opt_state, batches, round_idx, mask_row,
@@ -119,6 +94,41 @@ def make_round_body(model, *, strategy, opt_cfg, track_update_norm=False):
 
         (lora, opt_state), ms = jax.lax.scan(step, (lora, opt_state), batches)
         return lora, opt_state, ms
+
+    return client_local
+
+
+def make_round_body(model, *, strategy, opt_cfg, track_update_norm=False):
+    """Returns round_body(base, adapters, opt_N, batches, round_idx, weights).
+
+    ``adapters`` is a client-stacked :class:`AdapterSet`: its ``lora`` tree
+    and ``opt_N`` carry a leading client dim, ``batches`` leaves are
+    (N, local_steps, batch, ...).  Returns (adapters', opt_N, metrics).
+
+    The scaling factor and the per-client rank mask are READ OFF the
+    AdapterSet — the engine no longer threads them as loose arguments:
+
+      - a python-float ``adapters.gamma`` (homogeneous, or uniform
+        per-client gammas collapsed by AdapterSet) stays static and is
+        folded into B at trace time by the model API;
+      - a per-client (N,) ``adapters.gamma`` reaches each client as a
+        traced gamma_i under the vmap and is folded into that client's B
+        inside the loss (``AdapterSet.fold_gamma``), so the gamma reaching
+        the kernels is always the static 1.0 the fused Pallas tier needs;
+      - ``adapters.rank_mask`` (N, r_max) enables heterogeneous per-client
+        ranks in the padded representation: client gradients are masked to
+        the active rank rows and the server aggregate is rank-aware (see
+        ``core/aggregation``).
+
+    ``track_update_norm`` adds a per-round ``update_norm`` metric: the
+    gamma-scaled norm of the post-aggregation adapter movement, the series
+    the collapse sentinel (``repro.analysis.stability_check``) judges
+    against the Theorem 4.2 moment-scale prediction.  Opt-in so the
+    default metrics treedef (and every pinned bit-identity test) is
+    untouched.
+    """
+    strat = get_strategy(strategy)
+    client_local = _make_client_local(model, strat, opt_cfg)
 
     def round_body(base, adapters, opt_N, batches, round_idx, weights=None):
         """``weights`` (N,) non-negative: 0 = non-sampled (keeps its local
@@ -158,6 +168,191 @@ def make_round_body(model, *, strategy, opt_cfg, track_update_norm=False):
     return round_body
 
 
+def _tree_where(row_mask, new, old):
+    """Per-client row select over two identically-shaped stacked trees."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            row_mask.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old)
+
+
+def _quantize_rho(rho: float) -> float:
+    """Quantize the carried gamma correction rho = sqrt(N_eff/N) before
+    the trainer folds it statically into the next chunk's gamma: each
+    distinct gamma compiles its own executable (it rides the AdapterSet
+    treedef), so an unquantized rho would recompile every chunk under
+    sustained faults.  Two decimals bounds the executable set at ~100.
+    rho >= 0.995 passes through as exactly 1.0, keeping the staleness-0
+    fold a bitwise no-op."""
+    rho = float(rho)
+    if rho >= 0.995:
+        return 1.0
+    return max(round(rho, 2), 0.01)
+
+
+def make_buffered_round_body(model, *, strategy, opt_cfg, fault_model=None,
+                             track_update_norm=False):
+    """The async FedBuff-style round body: returns
+    round_body(base, adapters, opt_N, tau, rho, batches, round_idx,
+    k_fault, part, size_w, expected) -> (adapters', opt_N', tau', rho',
+    metrics).
+
+    One round, fully inside the scan (no host clocks, no per-arrival
+    jits):
+
+      1. every sampled client WITHOUT an in-flight upload trains locally
+         (in-flight clients hold their pending update and skip the round —
+         their state is the update still in transit);
+      2. the fault model draws this round's drop/straggle/corrupt masks
+         from ``k_fault``; corruption applies to a COPY of the upload,
+         never the client's local state;
+      3. the server screens arrivals (non-finite always rejected; norm
+         outliers vs ``screen_mult`` x the candidate median when screening is
+         on), caps the accepted buffer at ``buffer_size`` in client-index
+         order (overflow stays in flight), and aggregates the accepted
+         uploads with staleness weights ``(1 + tau)^-beta`` composed with
+         the size weights;
+      4. clients still in flight (stragglers + overflow) bump tau and keep
+         local state; everyone else resets tau and receives the broadcast
+         on exactly the leaves the inner strategy aggregates
+         (``agg_leaf_flags``) — dropped/rejected clients therefore resync
+         from the server, losing their corrupt/lost update;
+      5. the carried correction factor rho' = sqrt(N_eff_mass / expected)
+         is the Theorem 4.2 staleness correction: gamma_eff = gamma * rho
+         = alpha*sqrt(N_eff/r) (see
+         ``repro.core.scaling.staleness_corrected_gamma``).  The trainer
+         applies it at CHUNK boundaries as a static gamma fold (the
+         engine's per-gamma-executable specialization) rather than as an
+         in-scan runtime multiply: a runtime gamma would block XLA's
+         constant-folding of gamma into the loss graph and break the
+         staleness-0 bit-identity by ulps.  Within a chunk the body
+         trains with the chunk-start gamma_eff and carries rho for the
+         metrics and the next fold.
+
+    At zero faults, M = N, and tau = 0, every mask is the constant it is
+    in the synchronous engine and rho stays exactly 1.0, so this body is
+    BIT-identical to ``make_round_body`` (pinned by the conformance
+    harness): ``where(True, new, old)`` is ``new``, the weighted mean
+    with all-ones weights equals the fast-path mean bitwise (both lower
+    to sum * reciprocal — see ``aggregate_clients``), and the gamma fold
+    ``gamma * 1.0`` is exact, so the same executable keeps serving.
+
+    ``expected`` is the round's sampled-client count (static python int) —
+    the denominator that makes N_eff = N at full delivery.
+    """
+    from repro.core.aggregation import (BufferedStrategy, combine_received,
+                                        per_client_finite, per_client_norm)
+    from repro.core.faults import FaultModel
+    strat = get_strategy(strategy)
+    if not isinstance(strat, BufferedStrategy):
+        raise ValueError(
+            "make_buffered_round_body needs a BufferedStrategy (wrap the "
+            "inner method with aggregation.buffered(...))")
+    inner = strat.inner
+    fault_model = fault_model or FaultModel()
+    client_local = _make_client_local(model, strat, opt_cfg)
+
+    def round_body(base, adapters, opt_N, tau, rho, batches, round_idx,
+                   k_fault, part=None, size_w=None, expected=None):
+        lora_N = adapters.lora
+        mask_N = adapters.rank_mask
+        g = adapters.gamma
+        n = jax.tree.leaves(lora_N)[0].shape[0]
+        expected = n if expected is None else expected
+        # gamma stays STATIC exactly as in make_round_body — the trainer
+        # already folded the previous chunk's rho into adapters.gamma, so
+        # the client compute graph is the synchronous engine's graph
+        static = isinstance(g, (int, float))
+        gamma_N = None if static else jnp.asarray(g, jnp.float32)
+        new_lora, new_opt, ms = jax.vmap(
+            functools.partial(client_local,
+                              gamma_static=g if static else None),
+            in_axes=(None, 0, 0, 0, None,
+                     None if mask_N is None else 0,
+                     None if gamma_N is None else 0))(
+                base, lora_N, opt_N, batches, round_idx, mask_N, gamma_N)
+
+        sampled = (jnp.ones((n,), bool) if part is None else part > 0)
+        in_flight = tau > 0
+        trained = sampled & ~in_flight
+        local_lora = _tree_where(trained, new_lora, lora_N)
+        local_opt = _tree_where(trained, new_opt, opt_N)
+
+        fr = fault_model.sample(k_fault, n)
+        attempting = sampled | in_flight
+        dropped = attempting & fr["drop"]
+        straggling = attempting & ~dropped & fr["straggle"]
+        arrived = attempting & ~dropped & ~straggling
+        upload = fault_model.corrupt_tree(
+            jax.random.fold_in(k_fault, 1), local_lora,
+            arrived & fr["corrupt"])
+
+        rejected = jnp.zeros((n,), bool)
+        if strat.screen:
+            finite = per_client_finite(upload)
+            norms = per_client_norm(
+                jax.tree.map(lambda u, o: u - o, upload, lora_N))
+            cand = arrived & finite
+            cnt = cand.sum()
+            # judge against the candidate MEDIAN, not the mean: a finite
+            # norm-bomb inflates the mean by ~its own norm/N, so at small
+            # N it could never exceed mult x mean; the median stays at the
+            # clean level for up to half the cohort corrupted
+            med = jnp.sort(jnp.where(cand, norms, jnp.inf))[
+                jnp.maximum(cnt - 1, 0) // 2]
+            outlier = (norms > strat.screen_mult * med) & (cnt > 1)
+            rejected = arrived & (~finite | outlier)
+        accepted = arrived & ~rejected
+        if strat.buffer_size:
+            # cap the buffer in client-index order; overflow stays in
+            # flight and ages like a straggler
+            csum = jnp.cumsum(accepted.astype(jnp.int32))
+            in_buf = accepted & (csum <= strat.buffer_size)
+            overflow = accepted & ~in_buf
+            accepted = in_buf
+        else:
+            overflow = jnp.zeros((n,), bool)
+
+        disc = (1.0 + tau.astype(jnp.float32)) ** (-strat.beta)
+        w_up = accepted.astype(jnp.float32) * disc
+        if size_w is not None:
+            w_up = w_up * size_w
+        # the aggregate's keep=False fallback rows must be the same mixed
+        # new/old tree the synchronous engine feeds it — and replacing
+        # non-accepted rows also keeps NaN/Inf uploads out of the weighted
+        # sums (0 * NaN would still poison them)
+        san = _tree_where(accepted, upload, local_lora)
+        agg = inner.aggregate(san, round_idx, weights=w_up,
+                              rank_mask=mask_N)
+
+        pend = straggling | overflow
+        fa, fb = inner.agg_leaf_flags(round_idx)
+        out_lora = combine_received(local_lora, agg, ~pend, fa, fb)
+        tau_next = jnp.where(pend, tau + 1, 0).astype(tau.dtype)
+        mass = (accepted.astype(jnp.float32) * disc).sum()
+        n_eff = n * mass / expected
+        # floor at one effective client: a fully-lost round must not zero
+        # the next round's gammas (maximum(x, 1) == x bitwise at x >= 1,
+        # so the staleness-0 path still carries rho == 1.0 exactly)
+        rho_next = jnp.sqrt(jnp.maximum(mass, 1.0) / expected)
+
+        metrics = {"loss": ms["loss"].mean(),
+                   "grad_norm": ms["grad_norm"].mean(),
+                   "n_eff": n_eff, "gamma_scale": rho_next,
+                   "delivered": accepted.sum().astype(jnp.float32),
+                   "rejected": rejected.sum().astype(jnp.float32),
+                   "stale": pend.sum().astype(jnp.float32)}
+        if track_update_norm:
+            # same form as the synchronous metric — the chunk-start gamma
+            # already carries the staleness correction
+            g_scale = abs(g) if static else jnp.mean(jnp.abs(gamma_N))
+            metrics["update_norm"] = g_scale * global_norm(
+                jax.tree.map(lambda a, b: a - b, out_lora, lora_N))
+        return (dataclasses.replace(adapters, lora=out_lora), local_opt,
+                tau_next, rho_next, metrics)
+
+    return round_body
+
+
 def make_fed_round_step(model, *, strategy, opt_cfg, donate: bool = True,
                         jit: bool = True):
     """Single-round entry point (back-compat shim over the round body).
@@ -175,7 +370,7 @@ def make_fed_round_step(model, *, strategy, opt_cfg, donate: bool = True,
 def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
                    batch_fn=None, client_weights=None,
                    donate: bool = True, jit: bool = True,
-                   track_update_norm: bool = False):
+                   track_update_norm: bool = False, fault_model=None):
     """Build the chunked scan executor.
 
     Returns run_chunk(base, adapters, opt_N, key, round0, batches=None,
@@ -202,14 +397,38 @@ def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
     sampled participation mask inside the scan.
 
     ``adapters``/``opt_N``/``key`` are donated when ``jit`` and ``donate``.
+
+    A :class:`~repro.core.aggregation.BufferedStrategy` switches to the
+    async buffered engine: the scan additionally carries ``async_state``
+    ({"tau": (N,) int32 staleness counters, "rho": scalar f32 gamma
+    correction}) and the signature becomes run_chunk(base, adapters,
+    opt_N, key, round0, async_state, batches=None, num_rounds=None) ->
+    (adapters, opt_N, key, async_state, metrics).  ``fault_model``
+    (:class:`~repro.core.faults.FaultModel`) injects deterministic
+    drop/straggle/corrupt faults from a per-round key derived from the
+    carried scan key — identical to the synchronous key stream, so the
+    two engines consume randomness identically at staleness 0.
     """
-    round_body = make_round_body(model, strategy=strategy, opt_cfg=opt_cfg,
-                                 track_update_norm=track_update_norm)
+    from repro.core.aggregation import BufferedStrategy
+    strat = get_strategy(strategy)
+    buffered = isinstance(strat, BufferedStrategy)
+    if fault_model is not None and not buffered:
+        raise ValueError(
+            "fault injection needs the buffered engine — wrap the "
+            "strategy with aggregation.buffered(...) (the synchronous "
+            "scan cannot represent an in-flight upload)")
+    if buffered:
+        round_body = make_buffered_round_body(
+            model, strategy=strat, opt_cfg=opt_cfg, fault_model=fault_model,
+            track_update_norm=track_update_norm)
+    else:
+        round_body = make_round_body(model, strategy=strat, opt_cfg=opt_cfg,
+                                     track_update_norm=track_update_norm)
     size_w = None if client_weights is None else jnp.asarray(
         client_weights, jnp.float32)
 
-    def run_chunk(base, adapters, opt_N, key, round0, batches=None,
-                  num_rounds=None):
+    def run_chunk(base, adapters, opt_N, key, round0, async_state=None,
+                  batches=None, num_rounds=None):
         # packed frozen base on the reference tier: dequantize UP FRONT,
         # once per compiled chunk — scan-invariant, so XLA materializes the
         # fp view once instead of per round-step.  Fused tiers keep the base
@@ -221,20 +440,38 @@ def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
                     base = dequantize_tree(base)
         num_clients = jax.tree.leaves(adapters.lora)[0].shape[0]
         num_sampled = max(1, int(round(participation * num_clients)))
+        if buffered and async_state is None:
+            raise ValueError(
+                "the buffered engine carries async_state — pass "
+                "{'tau': (N,) int32, 'rho': f32 scalar} (init: zeros, 1.0)")
 
         def scan_step(carry, xs):
-            aset_c, opt_c, k = carry
+            if buffered:
+                aset_c, opt_c, k, tau_c, rho_c = carry
+            else:
+                aset_c, opt_c, k = carry
             k, k_round = jax.random.split(k)
+            # identical split order to the synchronous engine, then a
+            # SEPARATE fold for faults: the data/sampling streams match at
+            # staleness 0 and the fault stream is chunking-invariant
             k_data, k_sample = jax.random.split(k_round)
             if batch_fn is None:
                 round_idx, b = xs
             else:
                 round_idx = xs
                 b = batch_fn(k_data, round_idx)
-            weights = None
+            part = None
             if participation < 1.0:
-                weights = participation_weights(k_sample, num_clients,
-                                                num_sampled)
+                part = participation_weights(k_sample, num_clients,
+                                             num_sampled)
+            if buffered:
+                k_fault = jax.random.fold_in(k_round, 7)
+                aset_c, opt_c, tau_c, rho_c, metrics = round_body(
+                    base, aset_c, opt_c, tau_c, rho_c, b, round_idx,
+                    k_fault, part=part, size_w=size_w,
+                    expected=num_sampled)
+                return (aset_c, opt_c, k, tau_c, rho_c), metrics
+            weights = part
             if size_w is not None:
                 weights = size_w if weights is None else weights * size_w
             aset_c, opt_c, metrics = round_body(base, aset_c, opt_c, b,
@@ -252,6 +489,12 @@ def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
                 raise ValueError("run_chunk needs a static `num_rounds` "
                                  "when batches are generated on device")
             xs = round0 + jnp.arange(num_rounds)
+        if buffered:
+            carry0 = (adapters, opt_N, key, async_state["tau"],
+                      async_state["rho"])
+            (adapters, opt_N, key, tau, rho), ms = jax.lax.scan(
+                scan_step, carry0, xs)
+            return adapters, opt_N, key, {"tau": tau, "rho": rho}, ms
         (adapters, opt_N, key), ms = jax.lax.scan(
             scan_step, (adapters, opt_N, key), xs)
         return adapters, opt_N, key, ms
@@ -259,7 +502,38 @@ def make_run_chunk(model, *, strategy, opt_cfg, participation: float = 1.0,
     if not jit:
         return run_chunk
     return jax.jit(run_chunk, static_argnames=("num_rounds",),
-                   donate_argnums=(1, 2, 3) if donate else ())
+                   donate_argnums=((1, 2, 3, 5) if buffered else (1, 2, 3))
+                   if donate else ())
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogConfig:
+    """Collapse-watchdog policy for :class:`FederatedTrainer`.
+
+    At every chunk boundary the watchdog judges the chunk's per-round
+    ``update_norm`` series with ``stability_report`` (Theorem 4.2).  On a
+    failed verdict it rolls the trainer back to the last-good snapshot
+    (taken before the chunk) and retries with a recovery action chosen by
+    :func:`repro.analysis.stability_check.recovery_action`:
+
+      - ``rescale`` (config half violated): adopt the paper's own fix,
+        gamma = alpha*sqrt(N/r) — a mis-scaled gamma is deterministic in
+        (gamma, r, N); no amount of retrying fixes it.  Disabled via
+        ``rescale_gamma=False`` (then every recovery is a backoff).
+      - ``backoff`` (measured drift): multiply participation by
+        ``backoff`` (floored at one client) and advance the fault seed,
+        so the retry samples a smaller, fresh cohort.
+
+    After ``max_retries`` failed retries of the same chunk the watchdog
+    raises :class:`~repro.analysis.stability_check.ScalingCollapseError`.
+    Verdicts need >= 2 norms, so chunks of one round are judged on the
+    trailing window only once enough history exists.
+    """
+    max_retries: int = 2
+    backoff: float = 0.5
+    rescale_gamma: bool = True
+    scale_tol: float = 4.0
+    trend_tol: float = 8.0
 
 
 class FederatedTrainer:
@@ -294,7 +568,7 @@ class FederatedTrainer:
     def __init__(self, model, dataset, *, lora_cfg, fed_cfg, opt_cfg,
                  seed: int = 0, base_params=None, data_mode: str = "host",
                  chunk_rounds: int = 0, mesh=None,
-                 track_stability: bool = False):
+                 track_stability: bool = False, watchdog=None):
         self.model = model
         self.dataset = dataset
         self.fed_cfg = fed_cfg
@@ -302,9 +576,17 @@ class FederatedTrainer:
         self.data_mode = data_mode
         self.chunk_rounds = chunk_rounds
         self.mesh = mesh
+        # the collapse watchdog judges every chunk, so it needs the
+        # update_norm metric the sentinel consumes
+        self.watchdog = watchdog
+        self.watchdog_events = []
         # opt-in per-round update_norm metric feeding stability_report();
         # off by default so the engine's metrics treedef stays pinned
-        self.track_stability = track_stability
+        self.track_stability = track_stability or watchdog is not None
+        # async buffered engine: an explicit buffer config or any fault
+        # injection switches the scan to the FedBuff-style round body
+        self.async_mode = (fed_cfg.buffer_size is not None
+                           or fed_cfg.faults is not None)
         n = fed_cfg.num_clients
         ranks = lora_cfg.ranks
         if ranks is not None:
@@ -361,6 +643,15 @@ class FederatedTrainer:
         elif data_mode != "host":
             raise ValueError(f"unknown data_mode '{data_mode}'")
         self._build_engine()
+        # async carry: per-client staleness counters + the gamma correction
+        # factor rho = sqrt(N_eff/N) (1.0 = fully synchronous)
+        self.async_state = None
+        # the staleness correction the NEXT chunk's gamma is folded with
+        # (quantized host mirror of async_state["rho"]; 1.0 = synchronous)
+        self._rho_host = 1.0
+        if self.async_mode:
+            self.async_state = {"tau": jnp.zeros((n,), jnp.int32),
+                                "rho": jnp.asarray(1.0, jnp.float32)}
         # all round-level randomness (participation sampling, device-side
         # data) flows from this carried JAX key — no separate host RNG
         self._key = jax.random.key(seed + 31337)
@@ -387,12 +678,24 @@ class FederatedTrainer:
             local_steps = self.fed_cfg.local_steps
             batch_fn = lambda k, ridx: {
                 "tokens": device_data.sample_round(k, local_steps)}
+        strategy = self.fed_cfg.aggregation
+        fault_model = None
+        if self.async_mode:
+            from repro.core.aggregation import buffered
+            from repro.core.faults import FaultModel
+            strategy = buffered(
+                strategy, buffer_size=self.fed_cfg.buffer_size or 0,
+                beta=self.fed_cfg.staleness_beta,
+                screen=self.fed_cfg.screen_updates,
+                screen_mult=self.fed_cfg.screen_norm_mult)
+            fault_model = FaultModel(self.fed_cfg.faults)
         self._run_chunk = make_run_chunk(
-            self.model, strategy=self.fed_cfg.aggregation,
+            self.model, strategy=strategy,
             opt_cfg=self.opt_cfg,
             participation=self.fed_cfg.participation, batch_fn=batch_fn,
             client_weights=self.client_weights, donate=True,
-            track_update_norm=self.track_stability)
+            track_update_norm=self.track_stability,
+            fault_model=fault_model)
 
     @functools.cached_property
     def round_step(self):
@@ -459,6 +762,20 @@ class FederatedTrainer:
                 batches, rules.chunked_inputs_sharding(batches, self.mesh))
         return batches
 
+    def _train_adapters(self) -> AdapterSet:
+        """The AdapterSet the next chunk trains with: the configured
+        adapters, with the staleness correction rho folded into gamma
+        (gamma_eff = gamma * rho, Theorem 4.2's alpha*sqrt(N_eff/r)).
+        The fold is STATIC — gamma rides the treedef — so the staleness-0
+        path (rho == 1.0) reuses the synchronous executable bit-exactly."""
+        aset = self.adapters
+        if self.async_state is None or self._rho_host == 1.0:
+            return aset
+        g = aset.gamma
+        g = (tuple(x * self._rho_host for x in g) if isinstance(g, tuple)
+             else g * self._rho_host)
+        return dataclasses.replace(aset, gamma=g)
+
     def _run_one_chunk(self, num_rounds: int):
         kwargs = {}
         if self.data_mode == "device":
@@ -466,9 +783,18 @@ class FederatedTrainer:
         else:
             kwargs["batches"] = self._stage_batches(num_rounds)
         with self._mesh_scope():
-            aset, self.opt_state, self._key, ms = self._run_chunk(
-                self.base, self.adapters, self.opt_state, self._key,
-                jnp.asarray(self.round_idx, jnp.int32), **kwargs)
+            if self.async_mode:
+                (aset, self.opt_state, self._key, self.async_state,
+                 ms) = self._run_chunk(
+                    self.base, self._train_adapters(), self.opt_state,
+                    self._key, jnp.asarray(self.round_idx, jnp.int32),
+                    self.async_state, **kwargs)
+                self._rho_host = _quantize_rho(
+                    float(self.async_state["rho"]))
+            else:
+                aset, self.opt_state, self._key, ms = self._run_chunk(
+                    self.base, self.adapters, self.opt_state, self._key,
+                    jnp.asarray(self.round_idx, jnp.int32), **kwargs)
         # only the A/B tree is engine state (gamma/rank mask are static
         # config riding in the AdapterSet treedef — the trainer keeps its
         # own uniform-rank mask even though the canonical AdapterSet form
@@ -484,10 +810,129 @@ class FederatedTrainer:
             out.append(m)
         return out
 
+    # ------------------------------------------------------------- watchdog
+
+    def _snapshot(self):
+        """Host copy of everything a chunk mutates — taken BEFORE the
+        chunk runs (the engine donates its device buffers, so the copies
+        must leave the device first)."""
+        host = lambda t: jax.tree.map(lambda x: np.asarray(x), t)
+        snap = {"lora": host(self.lora), "opt": host(self.opt_state),
+                "key": np.asarray(jax.random.key_data(self._key)),
+                "round": self.round_idx, "hist": len(self.history),
+                "events": len(self.watchdog_events),
+                "rho_host": self._rho_host}
+        if self.async_state is not None:
+            snap["async"] = host(self.async_state)
+        if self.data_mode == "host" and hasattr(self.dataset, "rng_state"):
+            snap["data_state"] = self.dataset.rng_state()
+        return snap
+
+    def _rollback(self, snap):
+        """Restore the last-good snapshot (state, PRNG streams, history)."""
+        dev = lambda t: jax.tree.map(jnp.asarray, t)
+        self.lora = dev(snap["lora"])
+        self.opt_state = dev(snap["opt"])
+        self._key = jax.random.wrap_key_data(jnp.asarray(snap["key"]))
+        self.round_idx = snap["round"]
+        del self.history[snap["hist"]:]
+        self._rho_host = snap["rho_host"]
+        if "async" in snap:
+            self.async_state = {
+                "tau": jnp.asarray(snap["async"]["tau"], jnp.int32),
+                "rho": jnp.asarray(snap["async"]["rho"], jnp.float32)}
+        if "data_state" in snap and hasattr(self.dataset, "set_rng_state"):
+            self.dataset.set_rng_state(snap["data_state"])
+        if self.mesh is not None:
+            self._place_on_mesh(self.mesh)
+
+    def _chunk_report(self, chunk_len: int):
+        """Stability verdict over the chunk just run (its own norms only —
+        a mid-run gamma rescale must not make the trend straddle two
+        scaling regimes).  Falls back to the trailing two-round window for
+        chunks of one; None when there is not enough history yet."""
+        wd = self.watchdog
+        norms = [h["update_norm"] for h in self.history
+                 if "update_norm" in h]
+        norms = norms[-max(chunk_len, 2):]
+        if len(norms) < 2:
+            return None
+        from repro.analysis.stability_check import stability_report
+        gamma = (self.gamma if self.gamma is not None
+                 else float(np.mean(self.gammas)))
+        return stability_report(
+            norms, gamma=gamma, r=self.lora_cfg.rank,
+            n_clients=self.fed_cfg.num_clients, alpha=self.lora_cfg.alpha,
+            scale_tol=wd.scale_tol, trend_tol=wd.trend_tol)
+
+    def _recover(self, report, retries: int):
+        """Apply the retry policy for a failed chunk verdict."""
+        from repro.analysis.stability_check import recovery_action
+        wd = self.watchdog
+        action = recovery_action(report, scale_tol=wd.scale_tol)
+        n = self.fed_cfg.num_clients
+        if action == "rescale" and wd.rescale_gamma:
+            # adopt the paper's factor: gamma = alpha*sqrt(N/r) (per-client
+            # gamma_i under heterogeneous ranks).  gamma rides in the
+            # AdapterSet treedef, so the next chunk recompiles once with
+            # the new static scale — no engine rebuild needed.
+            if self.ranks is not None:
+                self.gammas = per_client_gammas(
+                    "sfedlora", self.lora_cfg.alpha, self.ranks, n)
+                self.gamma = (self.gammas[0]
+                              if len(set(self.gammas)) == 1 else None)
+            else:
+                self.gamma = scaling_factor(
+                    "sfedlora", self.lora_cfg.alpha, self.lora_cfg.rank, n)
+                self.gammas = (self.gamma,) * n
+            self.lora_cfg = dataclasses.replace(self.lora_cfg,
+                                                scaling="sfedlora")
+            detail = f"gamma->{(self.gamma or self.gammas[0]):.4g} (sfedlora)"
+        else:
+            action = "backoff"
+            p = max(self.fed_cfg.participation * wd.backoff, 1.0 / n)
+            faults = self.fed_cfg.faults
+            if faults is not None:
+                faults = dataclasses.replace(faults, seed=faults.seed + 1)
+            self.fed_cfg = dataclasses.replace(self.fed_cfg,
+                                               participation=p,
+                                               faults=faults)
+            # participation and the fault seed are baked into the compiled
+            # scan — rebuild (rare: only on a recovery event)
+            self._build_engine()
+            detail = f"participation->{p:.3g}, fault seed advanced"
+        self.watchdog_events.append(
+            {"round": self.round_idx, "verdict": report.verdict,
+             "action": action, "detail": detail, "retry": retries + 1})
+
+    def _run_chunk_watched(self, chunk: int):
+        """Run one chunk under the watchdog: snapshot, run, judge; on a
+        failed verdict roll back, recover, retry (bounded)."""
+        if self.watchdog is None:
+            return self._run_one_chunk(chunk)
+        from repro.analysis.stability_check import ScalingCollapseError
+        retries = 0
+        while True:
+            snap = self._snapshot()
+            out = self._run_one_chunk(chunk)
+            report = self._chunk_report(chunk)
+            if report is None or report.ok:
+                return out
+            if retries >= self.watchdog.max_retries:
+                raise ScalingCollapseError(
+                    f"watchdog: chunk ending at round {self.round_idx} "
+                    f"still '{report.verdict}' after {retries} "
+                    f"retries: {report}")
+            self._rollback(snap)
+            self._recover(report, retries)
+            retries += 1
+
+    # -------------------------------------------------------------- running
+
     def run_round(self):
         """One federated round (a chunk of one — same compiled round body as
         chunked execution, so the two stay bit-identical)."""
-        return self._run_one_chunk(1)[0]
+        return self._run_chunk_watched(1)[0]
 
     def run(self, rounds=None, log_every: int = 0):
         # each distinct chunk length compiles its own scan; a trailing
@@ -498,7 +943,7 @@ class FederatedTrainer:
         while done < rounds:
             chunk = min(self.chunk_rounds or log_every or rounds,
                         rounds - done)
-            for m in self._run_one_chunk(chunk):
+            for m in self._run_chunk_watched(chunk):
                 if log_every and m["round"] % log_every == 0:
                     print(f"round {m['round']:4d}  loss {m['loss']:.4f}  "
                           f"|g| {m['grad_norm']:.3e}  "
@@ -510,6 +955,16 @@ class FederatedTrainer:
         """The scaling factor client ``client`` trains and serves with
         (gamma_i = scaling(alpha, r_i, N) under heterogeneous ranks)."""
         return self.gammas[client]
+
+    @property
+    def gamma_eff(self) -> float:
+        """The staleness-corrected scaling factor the NEXT chunk trains
+        with: gamma * rho where rho = sqrt(N_eff/N) from the last buffered
+        round, quantized for the static treedef fold (1.0 — i.e. plain
+        gamma — when synchronous or before any round has run)."""
+        base = (self.gamma if self.gamma is not None
+                else float(np.mean(self.gammas)))
+        return base * self._rho_host
 
     def stability_report(self, **kwargs):
         """Judge the run's per-round ``update_norm`` series against the
@@ -577,12 +1032,17 @@ class FederatedTrainer:
                                 * self.fed_cfg.num_clients, np.int64),
             "scaling": self.lora_cfg.scaling,
         }
+        async_state = None
+        if self.async_state is not None:
+            async_state = {k: np.asarray(v)
+                           for k, v in self.async_state.items()}
         save_federated_state(path, self.base, self.lora, self.opt_state,
                              self.round_idx, key=self._key,
                              data_state=data_state,
                              rank_mask=self.rank_mask,
                              partition_state=partition_state,
-                             adapter_meta=meta)
+                             adapter_meta=meta,
+                             async_state=async_state)
 
     def restore(self, path: str) -> None:
         from repro.checkpoint.io import load_federated_state
@@ -623,5 +1083,20 @@ class FederatedTrainer:
             self._key = key
         if data_state is not None and hasattr(self.dataset, "set_rng_state"):
             self.dataset.set_rng_state(data_state)
+        if self.async_mode:
+            ck_async = extras.get("async_state")
+            if ck_async is not None:
+                self.async_state = {
+                    "tau": jnp.asarray(ck_async["tau"], jnp.int32),
+                    "rho": jnp.asarray(ck_async["rho"], jnp.float32)}
+            else:
+                # legacy (synchronous-era) checkpoint: fresh async carry
+                self.async_state = {
+                    "tau": jnp.zeros((self.fed_cfg.num_clients,), jnp.int32),
+                    "rho": jnp.asarray(1.0, jnp.float32)}
+            # the fold mirror is derived, not stored — recompute it so the
+            # resumed chunk trains with the same gamma_eff the
+            # uninterrupted run would have used
+            self._rho_host = _quantize_rho(float(self.async_state["rho"]))
         if self.mesh is not None:
             self._place_on_mesh(self.mesh)

@@ -82,6 +82,26 @@ def per_client_gammas(name: str, alpha: float, ranks, n_clients: int):
                  for r in ranks)
 
 
+def staleness_corrected_gamma(gamma: float, n_eff, n_clients: int):
+    """gamma_eff for a round that effectively aggregated ``n_eff`` fresh
+    clients (buffered/async aggregation: rejected, dropped, and
+    staleness-discounted uploads all shrink N_eff below N).
+
+    Theorem 4.2's moment scale is gamma^2 * r / N for a mean over N
+    clients; with the weighted buffered mean the variance reduction goes
+    as 1/N_eff instead, so the stabilizing factor is
+    gamma_eff = alpha * sqrt(N_eff / r) = gamma * sqrt(N_eff / N).
+    Works on floats and traced arrays; degrades to exactly ``gamma`` at
+    N_eff = N (the staleness-0 bit-identity guarantee relies on the
+    engine's on-device form of this being 1.0 exactly there).
+    """
+    if n_clients < 1:
+        raise ValueError(
+            f"staleness_corrected_gamma needs n_clients >= 1, got "
+            f"{n_clients}")
+    return gamma * (n_eff / n_clients) ** 0.5
+
+
 def predicted_moment_scale(gamma: float, r: int, n_clients: int) -> float:
     """Theory (App. A eq. 23): adapter output first-moment scale after
     aggregation goes as gamma^2 * r / N.  SFed-LoRA makes this alpha^2

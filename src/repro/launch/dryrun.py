@@ -164,14 +164,14 @@ def _compile_stats(arch, shape_name, mesh, rank, alpha, *, num_layers=None,
         # never executed and their memory stats are not used)
         attn.Q_BLOCK = attn.KV_BLOCK = 4096
     try:
-        t0 = time.time()
+        t0 = time.monotonic()
         fn, in_specs, in_shard = _build(arch, shape_name, mesh, rank, alpha,
                                         num_layers=num_layers)
         with use_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=in_shard).lower(*in_specs)
-            t_lower = time.time() - t0
+            t_lower = time.monotonic() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.monotonic() - t0 - t_lower
     finally:
         repro.models.FULL_UNROLL = prev
         attn.Q_BLOCK, attn.KV_BLOCK = prev_blk

@@ -67,6 +67,21 @@ def _count_dispatch(n: int = 1) -> None:
     host_dispatches += n
 
 
+# requests evicted at a chunk boundary for exceeding their deadline_steps
+# (graceful degradation under load; truncated, not failed)
+timeouts = 0
+
+
+def reset_timeout_meter() -> None:
+    global timeouts
+    timeouts = 0
+
+
+def _count_timeout(n: int = 1) -> None:
+    global timeouts
+    timeouts += n
+
+
 def _model_jit(model, name: str, builder):
     """Per-model jit cache stored ON the model object itself.
 
@@ -365,17 +380,25 @@ class Request:
     the host boundary, never clamped.  The scheduler fills the bookkeeping
     fields: ``tokens`` (the generated ids, first token included),
     ``t_first`` / ``t_done`` (completion-relative timestamps for latency
-    metrics)."""
+    metrics).
+
+    ``deadline_steps`` caps how many tokens the scheduler will spend on
+    this request before evicting it at the next chunk boundary (graceful
+    degradation under load): a request that hits the cap finishes with
+    its tokens truncated, ``timed_out`` set, and the module ``timeouts``
+    counter bumped — its slot and blocks recycle immediately."""
     rid: int
     prompt: np.ndarray
     steps: int
     adapter_id: int = 0
     arrival: float = 0.0
+    deadline_steps: int | None = None
     slot: int = -1
     blocks: list = dataclasses.field(default_factory=list)
     tokens: list = dataclasses.field(default_factory=list)
     t_first: float | None = None
     t_done: float | None = None
+    timed_out: bool = False
 
 
 def _jit_paged_admit(model):
@@ -601,6 +624,12 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
                 running.append(r)
             for r in [r for r in group if r.steps <= 1]:
                 finish(r, r.t_first)
+            for r in [r for r in group
+                      if r in running and r.deadline_steps is not None
+                      and len(r.tokens) >= r.deadline_steps]:
+                r.timed_out = True
+                _count_timeout()
+                finish(r, r.t_first)
 
         # ---- decode chunk + eviction
         if running:
@@ -616,9 +645,19 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
             toks = np.asarray(toks)
             tnow = clock()
             for r in list(running):
-                take = min(chunk, r.steps - len(r.tokens))
+                # a deadline caps how many tokens this request may consume;
+                # the prefix generated up to the cap is identical to an
+                # un-deadlined run (eviction happens between chunks, never
+                # inside one)
+                cap = (r.steps if r.deadline_steps is None
+                       else min(r.steps, r.deadline_steps))
+                take = max(0, min(chunk, cap - len(r.tokens)))
                 r.tokens.extend(int(t) for t in toks[r.slot, :take])
                 if len(r.tokens) >= r.steps:
+                    finish(r, None if tnow == float("inf") else tnow)
+                elif len(r.tokens) >= cap:
+                    r.timed_out = True
+                    _count_timeout()
                     finish(r, None if tnow == float("inf") else tnow)
         elif pending:
             gap = pending[0].arrival - clock()
@@ -627,14 +666,17 @@ def serve_scheduled(model, params, requests, *, bank=None, max_batch=4,
     return sorted(reqs, key=lambda r: r.rid)
 
 
-def make_requests(trace, *, prompt_len, steps, tenants, vocab, seed=0):
+def make_requests(trace, *, prompt_len, steps, tenants, vocab, seed=0,
+                  deadline_steps=None):
     """Request list from an arrival trace.
 
     ``trace`` is either ``poisson:RATE:N`` (N arrivals, RATE req/s, seeded
     exponential inter-arrival gaps — the serve_bench scenario) or a path to
-    a JSON list of ``{"arrival": s, "steps": n, "adapter": k}`` records.
-    Prompts are seeded random ids, round-robin adapters unless the trace
-    names them."""
+    a JSON list of ``{"arrival": s, "steps": n, "adapter": k, "deadline":
+    d}`` records.  Prompts are seeded random ids, round-robin adapters
+    unless the trace names them.  ``deadline_steps`` is the default
+    per-request token budget (None = no deadline); a trace record's
+    ``deadline`` overrides it."""
     rng = np.random.default_rng(seed)
     if trace.startswith("poisson:"):
         _, rate, n = trace.split(":")
@@ -643,12 +685,16 @@ def make_requests(trace, *, prompt_len, steps, tenants, vocab, seed=0):
     else:
         with open(trace) as f:
             recs = json.load(f)
+    def _deadline(rec):
+        d = rec.get("deadline", deadline_steps)
+        return None if d is None else int(d)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, vocab, prompt_len).astype(
                         np.int32),
                     steps=int(rec.get("steps", steps)),
                     adapter_id=int(rec.get("adapter", i % max(tenants, 1))),
-                    arrival=float(rec.get("arrival", 0.0)))
+                    arrival=float(rec.get("arrival", 0.0)),
+                    deadline_steps=_deadline(rec))
             for i, rec in enumerate(recs)]
     for r in reqs:   # a bad trace record must fail here, not serve tenant N-1
         if not 0 <= r.adapter_id < tenants:
@@ -656,6 +702,11 @@ def make_requests(trace, *, prompt_len, steps, tenants, vocab, seed=0):
                 f"request rid={r.rid}: adapter {r.adapter_id} out of range "
                 f"for {tenants} tenants (trace record names a tenant the "
                 "bank does not hold)")
+        if r.deadline_steps is not None and r.deadline_steps < 1:
+            raise ValueError(
+                f"request rid={r.rid}: deadline_steps={r.deadline_steps} "
+                "must be >= 1 (the admission prefill always emits the "
+                "first token)")
     return reqs
 
 
@@ -730,6 +781,11 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=8,
                     help="decode steps per scheduler chunk (admission / "
                          "eviction happen at chunk boundaries)")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request token budget for the scheduler: "
+                         "requests still running at this many tokens are "
+                         "evicted (truncated) at the next chunk boundary "
+                         "and counted as timeouts")
     ap.add_argument("--hot-slots", type=int, default=0,
                     help="serve the bank through a LiveAdapterBank with "
                          "this many device-resident slots; the remaining "
@@ -753,7 +809,9 @@ def main(argv=None):
     if args.arrival_trace:
         reqs = make_requests(args.arrival_trace, prompt_len=4,
                              steps=args.steps, tenants=bank.size,
-                             vocab=cfg.vocab_size)
+                             vocab=cfg.vocab_size,
+                             deadline_steps=args.deadline_steps)
+        reset_timeout_meter()
         serve_bank = bank
         if args.hot_slots:
             serve_bank = LiveAdapterBank.from_bank(bank,
@@ -768,11 +826,13 @@ def main(argv=None):
         p50 = lats[len(lats) // 2] if lats else 0.0
         p99 = lats[min(len(lats) - 1, int(len(lats) * 0.99))] if lats else 0.0
         toks = sum(len(r.tokens) for r in done)
+        n_to = sum(1 for r in done if r.timed_out)
         print(f"# {args.arch} scheduled serve: {len(done)} requests, "
               f"{bank.size} tenants, max_batch={args.max_batch} "
               f"block={args.block_size} chunk={args.chunk}  "
               f"p50={p50*1000:.0f}ms p99={p99*1000:.0f}ms "
-              f"goodput={toks/dt:.1f} tok/s")
+              f"goodput={toks/dt:.1f} tok/s"
+              + (f" timeouts={n_to}" if args.deadline_steps else ""))
         if args.hot_slots:
             print(f"# live bank: {serve_bank.hot_slots}/{len(serve_bank.tenants)} "
                   f"slots hot, {serve_bank.promotions} promotions, "

@@ -76,6 +76,31 @@ def main(argv=None):
                          "dequantize per-tile in VMEM (core/quant.py)")
     ap.add_argument("--quant-group", type=int, default=64,
                     help="int4 group size (power of two <= 128)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault injection spec, e.g. "
+                         "'dropout=0.1,straggle=geom:0.3,corrupt=0.01' "
+                         "(see repro.core.faults.parse_faults); implies the "
+                         "async buffered engine")
+    ap.add_argument("--buffer", type=int, default=None, metavar="M",
+                    help="async buffered aggregation: cap the per-round "
+                         "buffer at M accepted uploads (0 = no cap, M = N "
+                         "— bit-identical to the synchronous engine at "
+                         "zero faults)")
+    ap.add_argument("--staleness-beta", type=float, default=0.5,
+                    help="staleness discount exponent: an upload tau "
+                         "rounds old aggregates with weight (1+tau)^-beta")
+    ap.add_argument("--no-screen", action="store_true",
+                    help="disable server-side screening of non-finite / "
+                         "norm-outlier uploads before aggregation")
+    ap.add_argument("--screen-mult", type=float, default=10.0,
+                    help="reject finite uploads whose norm exceeds this "
+                         "multiple of the round median")
+    ap.add_argument("--watchdog", type=int, default=None, metavar="RETRIES",
+                    help="collapse watchdog: judge every chunk against the "
+                         "Theorem 4.2 sentinel; on a failed verdict roll "
+                         "back to the chunk-start snapshot and retry "
+                         "(rescale gamma / back off participation) up to "
+                         "RETRIES times before raising")
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
     ap.add_argument("--resume", default=None,
                     help="checkpoint to restore (incl. PRNG key + round, so "
@@ -105,6 +130,14 @@ def main(argv=None):
         kb, _ = jax.random.split(jax.random.key(args.seed))
         base_params = quantize_tree(model.init(kb), args.quant,
                                     args.quant_group)
+    faults = None
+    if args.faults:
+        from repro.core.faults import parse_faults
+        faults = parse_faults(args.faults)
+    watchdog = None
+    if args.watchdog is not None:
+        from repro.core.federated import WatchdogConfig
+        watchdog = WatchdogConfig(max_retries=args.watchdog)
     tr = FederatedTrainer(
         model, ds,
         lora_cfg=LoRAConfig(rank=args.rank, ranks=ranks, alpha=args.alpha,
@@ -116,10 +149,15 @@ def main(argv=None):
                                 partition=args.partition,
                                 dirichlet_alpha=args.dirichlet_alpha,
                                 participation=args.participation,
-                                weight_by_size=args.weight_by_size),
+                                weight_by_size=args.weight_by_size,
+                                buffer_size=args.buffer,
+                                staleness_beta=args.staleness_beta,
+                                screen_updates=not args.no_screen,
+                                screen_norm_mult=args.screen_mult,
+                                faults=faults),
         opt_cfg=OptimizerConfig(name=args.optimizer, lr=args.lr),
         seed=args.seed, base_params=base_params, data_mode=args.data_mode,
-        chunk_rounds=args.chunk_rounds, mesh=mesh)
+        chunk_rounds=args.chunk_rounds, mesh=mesh, watchdog=watchdog)
     if args.resume:
         tr.restore(args.resume)
         # an fp checkpoint restored under --quant is packed once here; a
@@ -136,8 +174,20 @@ def main(argv=None):
           f"{gamma_str} N={args.clients}"
           + (" weight-by-size" if args.weight_by_size else "")
           + (f" mesh={args.mesh}" if args.mesh else "")
-          + (f" quant={args.quant}" if args.quant != "none" else ""))
+          + (f" quant={args.quant}" if args.quant != "none" else "")
+          + (f" buffer={'N' if args.buffer == 0 else args.buffer}"
+             if tr.async_mode else "")
+          + (f" faults[{args.faults}]" if args.faults else "")
+          + (f" watchdog(retries={args.watchdog})" if watchdog else ""))
     tr.run(args.rounds, log_every=max(1, args.rounds // 10))
+    if tr.async_mode:
+        last = tr.history[-1]
+        print(f"# async: gamma_eff={tr.gamma_eff:.4f} "
+              f"n_eff={last['n_eff']:.2f} delivered={last['delivered']:.0f} "
+              f"rejected={last['rejected']:.0f} stale={last['stale']:.0f}")
+    for ev in tr.watchdog_events:
+        print(f"# watchdog: round {ev['round']} verdict={ev['verdict']} "
+              f"-> {ev['action']} ({ev['detail']}, retry {ev['retry']})")
     ppl = tr.eval_perplexity()
     print(f"# final held-out perplexity: {ppl:.3f}")
     if args.save:

@@ -61,7 +61,8 @@ def tier_models():
 
 def make_trainer(model, base, tier, *, strategy, ranks=None,
                  chunk_rounds=0, participation=1.0, weight_by_size=False,
-                 partition="iid", optimizer="sgd", seed=0):
+                 partition="iid", optimizer="sgd", seed=0,
+                 buffer_size=None, faults=None):
     s = _SCALE[tier]
     ds = FederatedDataset(64, s["n"], seq_len=s["seq"],
                           batch_per_client=s["batch"], partition=partition,
@@ -74,7 +75,9 @@ def make_trainer(model, base, tier, *, strategy, ranks=None,
                                 aggregation=strategy,
                                 participation=participation,
                                 partition=partition,
-                                weight_by_size=weight_by_size),
+                                weight_by_size=weight_by_size,
+                                buffer_size=buffer_size,
+                                faults=faults),
         opt_cfg=OptimizerConfig(name=optimizer, lr=0.05), seed=seed,
         base_params=base, chunk_rounds=chunk_rounds)
 
@@ -140,6 +143,57 @@ def test_uniform_rank_het_bit_identical_with_participation(tier_models):
                        ranks=uniform, participation=0.5, chunk_rounds=2)
     het.run(4)
     assert_state_bitequal(hom, het)
+
+
+# ------------- (e) buffered engine at staleness 0 degrades to synchronous
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_buffered_staleness0_bit_identical_to_sync(tier_models, tier,
+                                                   strategy):
+    """The async buffered wrapper with zero faults and an uncapped buffer
+    (M = N, every upload arrives with tau = 0) must be BIT-identical to
+    the synchronous engine for every strategy, on both tiers — the
+    conformance anchor the fault-tolerant engine's correctness argument
+    rests on (ISSUE 10): staleness discounts at tau=0 are exactly 1,
+    screening accepts every finite upload, and the weighted mean's
+    reciprocal form reproduces the unweighted mean's lowering bitwise."""
+    model, base = tier_models[tier]
+    s = _SCALE[tier]
+    dispatch.force_mode(tier if tier == "interpret" else None)
+    try:
+        sync = make_trainer(model, base, tier, strategy=strategy,
+                            chunk_rounds=s["rounds"])
+        sync.run(s["rounds"])
+        buf = make_trainer(model, base, tier, strategy=strategy,
+                           chunk_rounds=s["rounds"], buffer_size=0)
+        buf.run(s["rounds"])
+    finally:
+        dispatch.force_mode(None)
+    assert buf.async_mode and not sync.async_mode
+    assert_state_bitequal(sync, buf)
+    # the correction never engaged: every round delivered all N updates
+    assert buf.gamma_eff == sync.adapters.gamma
+    for h in buf.history:
+        assert float(h["n_eff"]) == s["n"]
+        assert float(h["gamma_scale"]) == 1.0
+        assert float(h["stale"]) == 0.0 and float(h["rejected"]) == 0.0
+
+
+def test_buffered_staleness0_composes_with_sampling_and_weights(tier_models):
+    """Buffered bit-identity survives participation sampling (pending
+    clients are 'in flight', not stale) and size-weighted aggregation
+    (the staleness discount multiplies into the size weights)."""
+    model, base = tier_models["reference"]
+    for kw in (dict(participation=0.5),
+               dict(partition="dirichlet", weight_by_size=True)):
+        sync = make_trainer(model, base, "reference", strategy="fedsa",
+                            chunk_rounds=2, **kw)
+        sync.run(4)
+        buf = make_trainer(model, base, "reference", strategy="fedsa",
+                           chunk_rounds=2, buffer_size=0, **kw)
+        buf.run(4)
+        assert_state_bitequal(sync, buf)
 
 
 # ----------------------------------- (a) post-aggregate client agreement

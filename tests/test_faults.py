@@ -1,0 +1,415 @@
+"""Fault-tolerant federated engine (ISSUE 10): deterministic fault
+injection, async buffered aggregation semantics, screening, the
+staleness-corrected gamma, checkpointing under faults, and the
+collapse-watchdog rollback policy.
+
+The staleness-0 bit-identity anchor (buffered == sync for every strategy,
+both tiers) lives in tests/test_conformance.py; this file covers the
+engine once faults are ACTIVE, where the conformance guarantee becomes:
+same seed + same FaultConfig => same failure schedule => bit-exact replay
+(chunking-aligned runs and crash-resume).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.stability_check import (ScalingCollapseError,
+                                            recovery_action,
+                                            stability_report)
+from repro.configs.base import (FederatedConfig, LoRAConfig, ModelConfig,
+                                OptimizerConfig)
+from repro.core.faults import FaultConfig, FaultModel, parse_faults
+from repro.core.federated import (FederatedTrainer, WatchdogConfig,
+                                  _quantize_rho)
+from repro.core.scaling import staleness_corrected_gamma
+from repro.data.synthetic import FederatedDataset
+from repro.models.api import build_model
+
+VOCAB = 64
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="faults-tiny", family="dense", num_layers=1,
+                      d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                      d_ff=64, vocab_size=VOCAB)
+    model = build_model(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+def make_trainer(model, base, *, n=4, rank=4, alpha=8.0, scaling="sfedlora",
+                 local_steps=1, chunk_rounds=0, seed=0, watchdog=None,
+                 participation=1.0, **fed_kw):
+    ds = FederatedDataset(VOCAB, n, seq_len=8, batch_per_client=1, seed=seed)
+    return FederatedTrainer(
+        model, ds,
+        lora_cfg=LoRAConfig(rank=rank, alpha=alpha, scaling=scaling),
+        fed_cfg=FederatedConfig(num_clients=n, local_steps=local_steps,
+                                aggregation="fedsa",
+                                participation=participation, **fed_kw),
+        opt_cfg=OptimizerConfig(name="sgd", lr=0.05), seed=seed,
+        base_params=base, chunk_rounds=chunk_rounds, watchdog=watchdog)
+
+
+def assert_state_bitequal(tr_a, tr_b):
+    for x, y in zip(jax.tree.leaves((tr_a.lora, tr_a.opt_state)),
+                    jax.tree.leaves((tr_b.lora, tr_b.opt_state))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ parse_faults
+
+def test_parse_faults_full_spec():
+    cfg = parse_faults("dropout=0.1,straggle=geom:0.3,corrupt=0.01,"
+                       "mode=noise,noise=5,seed=3")
+    assert cfg == FaultConfig(dropout=0.1, straggle=0.3, corrupt=0.01,
+                              corrupt_mode="noise", noise_scale=5.0, seed=3)
+
+
+def test_parse_faults_empty_is_null():
+    assert parse_faults("").null
+    assert parse_faults("dropout=0.1").null is False
+
+
+def test_parse_faults_rejects_bad_input():
+    with pytest.raises(ValueError, match="key=value"):
+        parse_faults("dropout")
+    with pytest.raises(ValueError, match="unknown --faults key"):
+        parse_faults("jitter=0.5")
+    with pytest.raises(ValueError, match="in \\[0, 1\\]"):
+        parse_faults("dropout=1.5")
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultConfig(corrupt=0.1, corrupt_mode="bitflip")
+
+
+# -------------------------------------------------------------- FaultModel
+
+def test_fault_masks_deterministic_and_seed_dependent():
+    key = jax.random.key(0)
+    fm = FaultModel(FaultConfig(dropout=0.5, straggle=0.5, corrupt=0.5))
+    a = fm.sample(key, 64)
+    b = fm.sample(key, 64)
+    for k in ("drop", "straggle", "corrupt"):
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+        assert a[k].shape == (64,) and a[k].dtype == jnp.bool_
+    # a different FaultConfig.seed draws an independent schedule
+    fm2 = FaultModel(FaultConfig(dropout=0.5, straggle=0.5, corrupt=0.5,
+                                 seed=1))
+    c = fm2.sample(key, 64)
+    assert any(not np.array_equal(np.asarray(a[k]), np.asarray(c[k]))
+               for k in a)
+
+
+def test_fault_masks_zero_rate_is_constant_false():
+    fm = FaultModel(FaultConfig(dropout=0.5))
+    masks = fm.sample(jax.random.key(0), 256)
+    assert not np.any(np.asarray(masks["straggle"]))
+    assert not np.any(np.asarray(masks["corrupt"]))
+    # and the rates are roughly honored where nonzero
+    assert 0.3 < np.asarray(masks["drop"]).mean() < 0.7
+
+
+def test_corrupt_tree_nan_mode_touches_only_masked_rows():
+    tree = {"a": jnp.ones((4, 3, 2)), "b": jnp.ones((4, 2))}
+    mask = jnp.asarray([True, False, True, False])
+    fm = FaultModel(FaultConfig(corrupt=0.5, corrupt_mode="nan"))
+    out = fm.corrupt_tree(jax.random.key(0), tree, mask)
+    for leaf in jax.tree.leaves(out):
+        leaf = np.asarray(leaf)
+        assert not np.isfinite(leaf[0]).any()
+        assert not np.isfinite(leaf[2]).any()
+        np.testing.assert_array_equal(leaf[1], 1.0)
+        np.testing.assert_array_equal(leaf[3], 1.0)
+    # nan/inf alternate across leaves so both screens get exercised
+    finite_kinds = {str(np.asarray(leaf)[0].flat[0])
+                    for leaf in jax.tree.leaves(out)}
+    assert finite_kinds == {"nan", "inf"}
+
+
+def test_corrupt_tree_noise_mode_is_finite_norm_outlier():
+    tree = {"a": jnp.ones((4, 8))}
+    mask = jnp.asarray([True, False, False, False])
+    fm = FaultModel(FaultConfig(corrupt=0.5, corrupt_mode="noise",
+                                noise_scale=50.0))
+    out = np.asarray(fm.corrupt_tree(jax.random.key(0), tree, mask)["a"])
+    assert np.isfinite(out).all()
+    assert np.linalg.norm(out[0]) > 10 * np.linalg.norm(out[1])
+    np.testing.assert_array_equal(out[1:], 1.0)
+
+
+def test_corrupt_tree_zero_rate_returns_input():
+    tree = {"a": jnp.ones((2, 2))}
+    fm = FaultModel(FaultConfig())
+    assert fm.corrupt_tree(jax.random.key(0), tree,
+                           jnp.ones((2,), bool)) is tree
+
+
+# ------------------------------------------------- scaling-factor helpers
+
+def test_staleness_corrected_gamma():
+    assert staleness_corrected_gamma(8.0, 4, 4) == 8.0
+    assert staleness_corrected_gamma(8.0, 1, 4) == pytest.approx(4.0)
+    assert staleness_corrected_gamma(8.0, 0, 4) == 0.0
+    with pytest.raises(ValueError, match="n_clients"):
+        staleness_corrected_gamma(8.0, 1, 0)
+
+
+def test_quantize_rho():
+    assert _quantize_rho(1.0) == 1.0
+    assert _quantize_rho(0.996) == 1.0          # near-1 snaps to exact 1.0
+    assert _quantize_rho(0.707) == 0.71
+    assert _quantize_rho(0.0) == 0.01           # floored: never kills gamma
+    assert isinstance(_quantize_rho(jnp.asarray(0.5)), float)
+
+
+# -------------------------------------------------- engine under faults
+
+def test_dropout_shrinks_n_eff_and_gamma_eff(tiny):
+    model, base = tiny
+    tr = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                      faults=FaultConfig(dropout=0.5, seed=2))
+    tr.run(6)
+    n_eff = np.asarray([h["n_eff"] for h in tr.history])
+    assert (n_eff < tr.fed_cfg.num_clients).any()
+    assert tr.gamma_eff < tr.adapters.gamma
+    assert tr.gamma_eff == tr.adapters.gamma * tr._rho_host
+    assert all(np.isfinite(h["loss"]) for h in tr.history)
+
+
+def test_stragglers_deliver_late_with_staleness(tiny):
+    """A straggling upload stays in flight and lands in a later round:
+    the stale metric counts tau>0 deliveries and every update is still
+    eventually delivered or superseded (no client starves forever)."""
+    model, base = tiny
+    tr = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                      faults=FaultConfig(straggle=0.5, seed=1))
+    tr.run(8)
+    stale = np.asarray([h["stale"] for h in tr.history])
+    delivered = np.asarray([h["delivered"] for h in tr.history])
+    assert stale.sum() > 0                      # late arrivals happened
+    assert (delivered < tr.fed_cfg.num_clients).any()
+    assert delivered.sum() > 0
+    assert all(np.isfinite(h["loss"]) for h in tr.history)
+
+
+def test_nan_corruption_is_screened(tiny):
+    """NaN/Inf uploads must be rejected server-side: the run stays finite,
+    the rejected metric counts them, and the corrupted client's LOCAL
+    state (which the corruption never touched) keeps training."""
+    model, base = tiny
+    tr = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                      faults=FaultConfig(corrupt=0.4, seed=3))
+    tr.run(6)
+    assert sum(h["rejected"] for h in tr.history) > 0
+    assert all(np.isfinite(h["loss"]) for h in tr.history)
+    for leaf in jax.tree.leaves((tr.lora, tr.opt_state)):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_noise_corruption_is_screened_as_norm_outlier(tiny):
+    """Finite norm bombs are rejected against the candidate MEDIAN (a
+    mean-based screen fails here: the bomb inflates the mean by ~norm/N,
+    so at small N it never exceeds mult x mean).  The median's breakdown
+    point is half the cohort — keep the corruption rate safely below it."""
+    model, base = tiny
+    tr = make_trainer(model, base, n=8, buffer_size=0, chunk_rounds=2,
+                      faults=FaultConfig(corrupt=0.25, corrupt_mode="noise",
+                                         noise_scale=1e4, seed=3))
+    tr.run(6)
+    assert sum(h["rejected"] for h in tr.history) > 0
+    for leaf in jax.tree.leaves(tr.lora):
+        assert np.abs(np.asarray(leaf)).max() < 1e3
+
+
+def test_screening_off_lets_nan_poison_state(tiny):
+    """Negative control: with screen_updates=False the same corruption
+    schedule reaches the aggregate — proving the screen is what saved the
+    run above, not the fault model being too gentle."""
+    model, base = tiny
+    tr = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                      screen_updates=False,
+                      faults=FaultConfig(corrupt=0.4, seed=3))
+    tr.run(6)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(tr.lora)]
+    assert any(not np.isfinite(x).all() for x in leaves)
+
+
+def test_buffer_cap_limits_delivered(tiny):
+    model, base = tiny
+    cap = 2
+    tr = make_trainer(model, base, n=4, buffer_size=cap, chunk_rounds=2,
+                      faults=FaultConfig(straggle=0.3, seed=1))
+    tr.run(6)
+    delivered = np.asarray([h["delivered"] for h in tr.history])
+    assert (delivered <= cap).all()
+    assert delivered.max() == cap               # the cap actually binds
+
+
+def test_fault_schedule_chunking_invariant(tiny):
+    """Same seed + same chunk length => the chunked run(6) and three
+    aligned run(2) calls replay the identical fault schedule AND state.
+    (Alignment matters: the staleness-corrected gamma folds statically at
+    chunk boundaries, so runs chunked DIFFERENTLY legitimately diverge
+    once rho != 1 — the schedule itself, keyed per round, never does.)"""
+    model, base = tiny
+    faults = FaultConfig(dropout=0.3, straggle=0.3, seed=5)
+    one = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                       faults=faults)
+    one.run(6)
+    many = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                        faults=faults)
+    for _ in range(3):
+        many.run(2)
+    assert_state_bitequal(one, many)
+    for k in ("delivered", "stale", "n_eff"):
+        np.testing.assert_array_equal([h[k] for h in one.history],
+                                      [h[k] for h in many.history])
+
+
+def test_crash_resume_under_faults_bit_exact(tiny, tmp_path):
+    """Kill-and-restore mid-run: the checkpoint carries the PRNG key,
+    round index, and async_state (tau + rho), so the resumed run replays
+    the remaining fault schedule and staleness accounting bit-exactly
+    against the uninterrupted run (chunk boundaries aligned)."""
+    model, base = tiny
+    path = str(tmp_path / "faulty.npz")
+    faults = FaultConfig(dropout=0.3, straggle=0.4, corrupt=0.2, seed=4)
+    kw = dict(buffer_size=0, chunk_rounds=3, faults=faults)
+
+    full = make_trainer(model, base, **kw)
+    full.run(6)
+
+    half = make_trainer(model, base, **kw)
+    half.run(3)
+    half.save(path)
+    payload = np.load(path)
+    assert "async_state::tau" in payload.files
+    assert "async_state::rho" in payload.files
+
+    res = make_trainer(model, base, **kw)
+    res.restore(path)
+    assert res.round_idx == 3
+    np.testing.assert_array_equal(np.asarray(res.async_state["tau"]),
+                                  np.asarray(half.async_state["tau"]))
+    assert res._rho_host == half._rho_host
+    res.run(3)
+    assert_state_bitequal(full, res)
+
+
+def test_restore_legacy_checkpoint_resets_async_state(tiny, tmp_path):
+    """A checkpoint written by the synchronous engine restores into a
+    buffered trainer with fresh async bookkeeping (tau=0, rho=1), not an
+    error — old checkpoints stay loadable."""
+    model, base = tiny
+    path = str(tmp_path / "legacy.npz")
+    sync = make_trainer(model, base, chunk_rounds=2)
+    sync.run(2)
+    sync.save(path)
+    buf = make_trainer(model, base, buffer_size=0, chunk_rounds=2)
+    buf.restore(path)
+    assert np.asarray(buf.async_state["tau"]).sum() == 0
+    assert buf._rho_host == 1.0
+
+
+# --------------------------------------------------- watchdog + recovery
+
+def _report(norms, *, gamma, r=4, n=4, alpha=8.0):
+    return stability_report(norms, gamma=gamma, r=r, n_clients=n,
+                            alpha=alpha)
+
+
+def test_recovery_action_classifies_config_vs_drift():
+    # config half violated (classic LoRA gamma at large r): retrying the
+    # same gamma cannot help — rescale
+    bad = _report([1.0, 1.0], gamma=8.0 / 64, r=64, n=8)
+    assert bad.verdict == "collapse"
+    assert recovery_action(bad) == "rescale"
+    # config sound but the measured norms explode: backoff
+    drift = _report([1.0, 9.0, 81.0], gamma=8.0)
+    assert not drift.ok
+    assert recovery_action(drift) == "backoff"
+
+
+def test_watchdog_rescale_rescues_collapsed_gamma(tiny):
+    """The ISSUE 10 acceptance scenario: classic gamma = alpha/r at r=64,
+    N=8 (Theorem 4.2 predicts moment scale 1/(rN) — deep collapse) plus
+    corrupted uploads.  The watchdog must catch the first chunk verdict,
+    roll back to the chunk-start snapshot, adopt the paper's
+    gamma = alpha*sqrt(N/r), and complete with a final 'stabilized'
+    report rather than raising."""
+    model, base = tiny
+    tr = make_trainer(model, base, n=8, rank=64, scaling="lora",
+                      buffer_size=0, chunk_rounds=4,
+                      faults=FaultConfig(corrupt=0.25, seed=1),
+                      watchdog=WatchdogConfig(max_retries=2))
+    gamma0 = tr.adapters.gamma
+    assert gamma0 == pytest.approx(8.0 / 64)
+    tr.run(8)
+    assert tr.watchdog_events, "watchdog never fired"
+    ev = tr.watchdog_events[0]
+    assert ev["verdict"] == "collapse" and ev["action"] == "rescale"
+    # the adopted factor is the paper's: alpha*sqrt(N/r) = 8*sqrt(8/64)
+    assert tr.adapters.gamma == pytest.approx(8.0 * (8 / 64) ** 0.5)
+    assert tr.lora_cfg.scaling == "sfedlora"
+    assert tr.stability_report().verdict == "stabilized"
+    assert all(np.isfinite(h["loss"]) for h in tr.history)
+
+
+def test_watchdog_bounded_retries_raise(tiny):
+    """With gamma rescue disabled, a config-half collapse is unfixable by
+    participation backoff — after max_retries the watchdog must raise
+    ScalingCollapseError instead of looping, and each retry must have
+    backed participation off (floored at one client)."""
+    model, base = tiny
+    tr = make_trainer(model, base, n=4, rank=64, scaling="lora",
+                      buffer_size=0, chunk_rounds=2,
+                      watchdog=WatchdogConfig(max_retries=1,
+                                              rescale_gamma=False))
+    with pytest.raises(ScalingCollapseError, match="collapse"):
+        tr.run(4)
+    assert len(tr.watchdog_events) == 1
+    assert tr.watchdog_events[0]["action"] == "backoff"
+    assert tr.fed_cfg.participation == 0.5
+    # the raise fires after the final failed retry ran its chunk
+    assert tr.round_idx == 2
+
+
+def test_watchdog_rollback_restores_chunk_start_state(tiny):
+    """A failed chunk must leave NO trace: after rollback + recovery the
+    retried chunk starts from bit-identical state, history, and round
+    index — only the recovery policy (gamma) differs."""
+    model, base = tiny
+    ref = make_trainer(model, base, n=4, rank=64, scaling="lora",
+                       buffer_size=0, chunk_rounds=2)
+    wd = make_trainer(model, base, n=4, rank=64, scaling="lora",
+                      buffer_size=0, chunk_rounds=2,
+                      watchdog=WatchdogConfig(max_retries=2))
+    ref.run(2)                                  # un-watched collapse run
+    wd.run(2)                                   # watched: rescued
+    assert wd.watchdog_events and wd.round_idx == 2
+    assert len(wd.history) == 2                 # rolled-back rounds pruned
+    # the rescued run trained with the sfedlora gamma, not the original
+    assert wd.adapters.gamma != ref.adapters.gamma
+
+
+def test_watchdog_quiet_on_healthy_run(tiny):
+    model, base = tiny
+    tr = make_trainer(model, base, buffer_size=0, chunk_rounds=2,
+                      watchdog=WatchdogConfig(max_retries=2))
+    tr.run(4)
+    assert tr.watchdog_events == []
+    assert tr.gamma_eff == tr.adapters.gamma
+
+
+def test_gamma_eff_rides_fault_seed_not_retry(tiny):
+    """Backoff recovery reseeds the fault stream (seed+1) so the retry is
+    a fresh draw, not a replay of the same failures."""
+    f0 = FaultConfig(dropout=0.5, seed=7)
+    f1 = dataclasses.replace(f0, seed=f0.seed + 1)
+    fm0, fm1 = FaultModel(f0), FaultModel(f1)
+    k = jax.random.key(0)
+    assert not np.array_equal(np.asarray(fm0.sample(k, 64)["drop"]),
+                              np.asarray(fm1.sample(k, 64)["drop"]))

@@ -390,3 +390,95 @@ def test_scheduled_block_starvation_waits_not_fails():
                                   5, 12))[:, 4:] for i in range(3)])
     np.testing.assert_array_equal(fixed,
                                   np.stack([r.tokens for r in done]))
+
+
+# ------------------------------------------------- deadline-bounded serving
+
+def test_deadline_evicts_at_chunk_boundary_with_exact_prefix():
+    """Graceful degradation: a request with deadline_steps=8 inside a
+    steps=32 ask is evicted at a chunk boundary with EXACTLY 8 tokens,
+    marked timed_out, counted by the timeout meter — and its tokens are a
+    bit-exact prefix of the un-deadlined run (eviction only ever happens
+    between chunks, so it cannot perturb decode numerics)."""
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = np.asarray(jax.random.randint(jax.random.key(5), (1, 6), 0,
+                                           cfg.vocab_size), np.int32)
+    full = serve.serve_scheduled(
+        model, params,
+        [serve.Request(rid=0, prompt=prompt[0], steps=32)],
+        max_batch=2, block_size=4, chunk=4, max_len=40, wait=False)
+    serve.reset_timeout_meter()
+    done = serve.serve_scheduled(
+        model, params,
+        [serve.Request(rid=0, prompt=prompt[0], steps=32,
+                       deadline_steps=8)],
+        max_batch=2, block_size=4, chunk=4, max_len=40, wait=False)
+    (r,) = done
+    assert r.timed_out and len(r.tokens) == 8
+    assert serve.timeouts == 1
+    np.testing.assert_array_equal(np.asarray(r.tokens),
+                                  np.asarray(full[0].tokens)[:8])
+    # an un-deadlined sibling is untouched
+    assert not full[0].timed_out and len(full[0].tokens) == 32
+
+
+def test_deadline_frees_slot_for_queued_request():
+    """The evicted request's slot and blocks go back to the pool: a queued
+    third request (max_batch=2) is admitted after the eviction and every
+    request completes -- deadlined ones at their cap, the rest in full."""
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = np.asarray(jax.random.randint(jax.random.key(6), (3, 4), 0,
+                                           cfg.vocab_size), np.int32)
+    serve.reset_timeout_meter()
+    reqs = [serve.Request(rid=0, prompt=prompt[0], steps=24,
+                          deadline_steps=4),
+            serve.Request(rid=1, prompt=prompt[1], steps=24,
+                          deadline_steps=4),
+            serve.Request(rid=2, prompt=prompt[2], steps=6)]
+    done = serve.serve_scheduled(model, params, reqs, max_batch=2,
+                                 block_size=4, chunk=4, max_len=32,
+                                 wait=False)
+    by_rid = {r.rid: r for r in done}
+    assert len(by_rid) == 3
+    assert by_rid[0].timed_out and len(by_rid[0].tokens) == 4
+    assert by_rid[1].timed_out and len(by_rid[1].tokens) == 4
+    assert not by_rid[2].timed_out and len(by_rid[2].tokens) == 6
+    assert serve.timeouts == 2
+
+
+def test_deadline_not_hit_is_a_noop():
+    """A deadline looser than steps changes nothing: same tokens as the
+    un-deadlined run, no timeout flagged."""
+    cfg = _cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = np.asarray(jax.random.randint(jax.random.key(7), (1, 5), 0,
+                                           cfg.vocab_size), np.int32)
+    serve.reset_timeout_meter()
+    runs = [serve.serve_scheduled(
+        model, params,
+        [serve.Request(rid=0, prompt=prompt[0], steps=6, deadline_steps=d)],
+        max_batch=1, block_size=4, chunk=3, max_len=16, wait=False)
+        for d in (None, 32)]
+    assert serve.timeouts == 0
+    for run in runs:
+        assert not run[0].timed_out and len(run[0].tokens) == 6
+    np.testing.assert_array_equal(runs[0][0].tokens, runs[1][0].tokens)
+
+
+def test_make_requests_deadline_default_and_trace_override(tmp_path):
+    trace = tmp_path / "trace.json"
+    trace.write_text('[{"arrival": 0.0, "steps": 8},'
+                     ' {"arrival": 0.0, "steps": 8, "deadline": 2}]')
+    reqs = serve.make_requests(str(trace), prompt_len=4, steps=8, tenants=1,
+                               vocab=64, deadline_steps=5)
+    assert reqs[0].deadline_steps == 5          # module default applies
+    assert reqs[1].deadline_steps == 2          # trace record overrides
+    trace.write_text('[{"arrival": 0.0, "steps": 8, "deadline": 0}]')
+    with pytest.raises(ValueError, match="deadline_steps"):
+        serve.make_requests(str(trace), prompt_len=4, steps=8, tenants=1,
+                            vocab=64)
